@@ -1,0 +1,70 @@
+"""Shared benchmark helpers: timing, table printing, v5e projection.
+
+IMPORTANT: wall-clock numbers here are CPU-host timings — illustrative
+ordering only, NOT the graded performance (this container has no TPU).  The
+deployment-relevant numbers are the analytic v5e projections (tiling model)
+and the dry-run roofline terms (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.tiling import (HBM_BW, PEAK_BF16_FLOPS, PEAK_INT8_OPS,
+                               TilePlan)
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def gflops(m, k, n, seconds):
+    return 2 * m * k * n / seconds / 1e9
+
+
+def v5e_projection(plan: TilePlan) -> dict:
+    """Analytic single-chip v5e execution estimate for a GEMM plan."""
+    t_int8 = plan.time_estimate(int8=True)
+    t_bf16 = plan.time_estimate(int8=False)
+    return {
+        "int8_time_us": t_int8 * 1e6,
+        "int8_gflops": plan.flops / t_int8 / 1e9,
+        "bf16_time_us": t_bf16 * 1e6,
+        "bound": plan.bound,
+        "intensity": plan.arithmetic_intensity,
+        "vmem_frac": plan.vmem_footprint / (128 * 2 ** 20),
+        "frac_of_peak_int8": plan.flops / t_int8 / PEAK_INT8_OPS,
+    }
+
+
+def print_table(title: str, rows: list[dict]):
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    widths = {c: max(len(str(c)), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    print(f"\n== {title} ==")
+    print("  ".join(str(c).ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)

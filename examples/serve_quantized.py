@@ -1,0 +1,73 @@
+"""Batched int8 serving: prefill a batch of prompts, decode new tokens.
+
+    PYTHONPATH=src python examples/serve_quantized.py --tokens 16
+
+The paper's deployment story end-to-end: offline weight quantization →
+dynamic activation quantization per step → int8 GEMMs for every
+projection → dequant epilogue; KV cache in bf16.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.quantize_params import quantize_model_params
+from repro.models.transformer import init_model
+from repro.serving.cache import init_cache
+from repro.serving.engine import serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_5_3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).replace(quant_proj="w8a8")
+    params = quantize_model_params(
+        init_model(jax.random.PRNGKey(0), cfg.replace(quant_proj="none")))
+    max_len = args.prompt_len + args.tokens
+    cache = init_cache(cfg, args.batch, max_len=max_len)
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    @jax.jit
+    def step(cache, tok, pos):
+        logits, cache = serve_step(params, cache, tok, pos, cfg)
+        nxt = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(tok.dtype)
+        return cache, nxt
+
+    # prefill token-by-token (cache-writing path), then decode
+    t0 = time.perf_counter()
+    tok = prompts[:, :1]
+    for t in range(args.prompt_len):
+        cache, _ = step(cache, prompts[:, t:t + 1], jnp.asarray(t, jnp.int32))
+    t_prefill = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    generated = []
+    tok = prompts[:, -1:]
+    for i in range(args.tokens):
+        cache, tok = step(cache, tok,
+                          jnp.asarray(args.prompt_len + i, jnp.int32))
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    tps = args.batch * args.tokens / t_decode
+    print(f"arch={cfg.name} batch={args.batch}")
+    print(f"prefill {args.prompt_len} tok: {t_prefill:.2f}s   "
+          f"decode {args.tokens} tok: {t_decode:.2f}s "
+          f"({tps:.1f} tok/s host-CPU)")
+    print("sample:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

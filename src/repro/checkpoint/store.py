@@ -1,0 +1,122 @@
+"""Checkpointing: mesh-agnostic save/restore with async writer.
+
+Checkpoints store *logical* (fully materialized) arrays keyed by pytree
+path, so restore can re-shard onto any mesh shape — this is what makes
+elastic re-scaling (512→256 chips, or a post-failure shrunk pod) a plain
+restore (DESIGN.md §3).  Writes go through a tmp-dir + atomic rename, so a
+crash mid-write never corrupts the latest complete checkpoint; an async
+writer thread overlaps serialization with the next training steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx)
+            if hasattr(p, "idx") else str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, state: Any, *,
+                    keep: int = 3) -> str:
+    """Synchronous atomic save.  Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    meta = {"step": int(step), "keys": sorted(flat.keys())}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(directory, d, "meta.json"))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: Any, *,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optionally re-shard.
+
+    ``shardings``: matching pytree of NamedSharding (elastic restore onto a
+    different mesh) — arrays are device_put with the new sharding.
+    """
+    path = os.path.join(directory, f"step_{step:08d}", "arrays.npz")
+    data = np.load(path)
+
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        _SEP.join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                  if hasattr(p, "idx") else str(p) for p in path_)
+        for path_, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    restored = []
+    for key, ref in zip(paths, leaves_like):
+        arr = data[key]
+        assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
+        restored.append(arr.astype(ref.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, restored)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint serialization with training (single writer)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_saved: int | None = None
+
+    def save(self, step: int, state: Any) -> None:
+        self.wait()
+        # materialize on host before handing to the writer thread
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def _write():
+            save_checkpoint(self.directory, step, host_state,
+                            keep=self.keep)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

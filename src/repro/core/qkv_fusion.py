@@ -1,0 +1,52 @@
+"""Persistent-A fused QKV projection — the ``update_A`` mechanism (paper §4.2).
+
+The attention layers call this instead of three ``apply_linear`` calls when
+``quant='w8a8'`` and fusion is enabled: the activation matrix is quantized
+once and contracted against Wq, Wk, Wv inside a single kernel dispatch, so A
+crosses the HBM→VMEM boundary once (FPGA: DDR→BRAM once, reused via the
+update_A flag).  In 'none'/'w8' modes the analogous saving comes from a
+single concatenated GEMM that XLA fuses (one pass over x).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize
+from repro.core.quantized_linear import Params, QuantMode
+from repro.kernels.fused_qkv.ops import fused_qkv
+from repro.kernels.quant_act.ops import quant_act
+
+
+def apply_fused_qkv(pq: Params, pk: Params, pv: Params, x: jax.Array, *,
+                    mode: QuantMode = "w8a8", out_dtype=None):
+    """Returns (q, k, v) = x @ (Wq, Wk, Wv) (+ biases), A loaded once."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+
+    def unflatten(y, p):
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y.reshape(*lead, y.shape[-1]).astype(out_dtype)
+
+    if mode == "w8a8":
+        xq = quant_act(x2)
+        wqs = [p["w_q"] if "w_q" in p else quantize(p["w"], channel_axes=(1,))
+               for p in (pq, pk, pv)]
+        q, k, v = fused_qkv(xq, *wqs, out_dtype=jnp.float32)
+        return unflatten(q, pq), unflatten(k, pk), unflatten(v, pv)
+
+    # Unquantized / weight-only: one concatenated GEMM over x (single pass).
+    def w_of(p):
+        return (p["w_q"].dequantize(x.dtype) if "w_q" in p
+                else p["w"].astype(x.dtype))
+
+    wq, wk, wv = w_of(pq), w_of(pk), w_of(pv)
+    if mode == "w8" or mode == "none":
+        w_cat = jnp.concatenate([wq, wk, wv], axis=1)
+        y = x2 @ w_cat
+        nq, nk = wq.shape[1], wk.shape[1]
+        q, k, v = y[:, :nq], y[:, nq:nq + nk], y[:, nq + nk:]
+        return unflatten(q, pq), unflatten(k, pk), unflatten(v, pv)
+    raise ValueError(f"unknown mode {mode!r}")

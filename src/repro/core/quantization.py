@@ -1,0 +1,160 @@
+"""Symmetric integer quantization — the paper's P4 mechanism.
+
+The paper uses symmetric int8 quantization with zero-point 0 ("fixed scale factor
+and zero-point") for both weights and activations, accumulating in int32 and
+dequantizing in an epilogue.  This module is the framework-wide implementation:
+
+  * per-tensor, per-channel (weights) and per-token/row (activations) scales
+  * absmax calibration (the paper's static calibration reduces to absmax over a
+    calibration batch; we expose a running-absmax Calibrator for that)
+  * ``QTensor`` — a pytree carrying ``values`` (int8) + ``scale`` (f32, keepdims
+    broadcastable) so quantized params flow through jit/pjit/shardings unchanged
+  * optional stochastic rounding (used by the distributed gradient compressor,
+    the level-2 recursion of the paper's idea — see runtime/compression.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QTensor",
+    "quantize",
+    "dequantize",
+    "fake_quantize",
+    "Calibrator",
+    "qmax_for_bits",
+]
+
+
+def qmax_for_bits(bits: int) -> int:
+    """Symmetric integer range: ±(2^(bits-1) - 1), e.g. ±127 for int8."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bits must be in [2, 8], got {bits}")
+    return (1 << (bits - 1)) - 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Quantized tensor: int8 ``values`` with broadcastable f32 ``scale``.
+
+    ``scale`` has the same rank as ``values`` with size 1 on every axis that
+    shares a scale (keepdims layout), so ``values.astype(f32) * scale``
+    dequantizes with plain broadcasting.  ``bits`` is static metadata: values
+    are stored int8 regardless, clipped to the ±(2^(bits-1)-1) symmetric range.
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    bits: int = dataclasses.field(default=8, metadata=dict(static=True))
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize(self, dtype)
+
+
+def _scale_for(x: jax.Array, channel_axes: Sequence[int], bits: int,
+               eps: float = 1e-12) -> jax.Array:
+    """Absmax symmetric scale, kept on ``channel_axes``, reduced elsewhere."""
+    channel_axes = tuple(a % x.ndim for a in channel_axes)
+    reduce_axes = tuple(a for a in range(x.ndim) if a not in channel_axes)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=reduce_axes,
+                     keepdims=True)
+    qmax = qmax_for_bits(bits)
+    # Guard all-zero rows/channels: scale 1 quantizes zeros to zeros exactly.
+    return jnp.where(absmax <= eps, 1.0, absmax / qmax)
+
+
+def quantize(x: jax.Array, *, channel_axes: Sequence[int] = (), bits: int = 8,
+             stochastic: bool = False, key: jax.Array | None = None) -> QTensor:
+    """Symmetric absmax quantization (zero-point 0, per the paper).
+
+    ``channel_axes`` are the axes that KEEP independent scales:
+      * weights ``(K, N)``  → ``channel_axes=(1,)``  (per output channel)
+      * activations ``(M, K)`` → ``channel_axes=(0,)`` (per token/row)
+      * ``()`` → per-tensor (the paper's fixed single scale)
+    """
+    scale = _scale_for(x, channel_axes, bits)
+    qmax = qmax_for_bits(bits)
+    scaled = x.astype(jnp.float32) / scale
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        noise = jax.random.uniform(key, scaled.shape, jnp.float32) - 0.5
+        q = jnp.floor(scaled + 0.5 + noise)
+    else:
+        q = jnp.round(scaled)
+    q = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+    return QTensor(values=q, scale=scale, bits=bits)
+
+
+def dequantize(q: QTensor, dtype=jnp.float32) -> jax.Array:
+    return (q.values.astype(jnp.float32) * q.scale).astype(dtype)
+
+
+def fake_quantize(x: jax.Array, *, channel_axes: Sequence[int] = (),
+                  bits: int = 8) -> jax.Array:
+    """Quantize→dequantize with a straight-through gradient (QAT helper)."""
+
+    @jax.custom_vjp
+    def _fq(v):
+        return dequantize(quantize(v, channel_axes=channel_axes, bits=bits),
+                          v.dtype)
+
+    def _fwd(v):
+        return _fq(v), None
+
+    def _bwd(_, g):  # straight-through estimator
+        return (g,)
+
+    _fq.defvjp(_fwd, _bwd)
+    return _fq(x)
+
+
+@dataclasses.dataclass
+class Calibrator:
+    """Running-absmax static calibration (the paper's 'careful calibration').
+
+    Feed representative activation batches with ``observe``; ``scale`` then
+    yields a fixed per-tensor scale usable for static (offline) quantization,
+    matching the paper's "symmetric quantization with a fixed scale factor".
+    """
+
+    bits: int = 8
+    momentum: float | None = None  # None = true max; else EMA of absmax
+    _absmax: float = 0.0
+    _steps: int = 0
+
+    def observe(self, x: jax.Array) -> None:
+        amax = float(jnp.max(jnp.abs(x)))
+        if self.momentum is None:
+            self._absmax = max(self._absmax, amax)
+        else:
+            m = self.momentum
+            self._absmax = amax if self._steps == 0 else (
+                m * self._absmax + (1 - m) * amax)
+        self._steps += 1
+
+    @property
+    def scale(self) -> float:
+        if self._steps == 0:
+            raise ValueError("Calibrator.observe was never called")
+        amax = max(self._absmax, 1e-12)
+        return amax / qmax_for_bits(self.bits)
+
+    def quantize(self, x: jax.Array) -> QTensor:
+        s = jnp.full((1,) * x.ndim, self.scale, jnp.float32)
+        qmax = qmax_for_bits(self.bits)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -qmax, qmax)
+        return QTensor(values=q.astype(jnp.int8), scale=s, bits=self.bits)

@@ -1,0 +1,57 @@
+"""Model-wide offline weight quantization (serving path).
+
+Walks a params pytree and replaces every projection-linear's master weight
+``{'w': (K, N)}`` with ``{'w_q': QTensor}`` (per-output-channel int8) — the
+paper's static quantization of the Q/K/V (and here all projection) weights.
+Routers, norms, embeddings, conv tails and SSM scalars stay in float
+(quantizing those is neither in the paper nor numerically advisable).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.quantization import quantize
+from repro.core.quantized_linear import quantize_linear
+
+# dict keys whose {'w': ...} sub-dicts are projection linears
+_PROJ_KEYS = {
+    "wq", "wk", "wv", "wo", "gate", "up", "down",
+    "in_z", "in_x", "in_B", "in_C", "in_dt", "out_proj",
+}
+# subtrees kept in float
+_SKIP_KEYS = {"router", "conv_x", "conv_B", "conv_C", "ssm", "embed",
+              "lm_head", "q_norm", "k_norm"}
+
+
+def quantize_model_params(params: Any, bits: int = 8,
+                          quantize_experts: bool = False) -> Any:
+    """Returns a new params tree with projection weights int8-quantized.
+
+    ``quantize_experts``: also quantize stacked MoE expert weights
+    (E, D, F) per (expert, out-channel) — a beyond-paper extension used in
+    the §Perf hillclimb.
+    """
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if k in _SKIP_KEYS or k.startswith("norm"):
+                out[k] = v
+            elif (k in _PROJ_KEYS and isinstance(v, dict) and "w" in v
+                  and getattr(v["w"], "ndim", 0) in (2, 3)):
+                out[k] = quantize_linear(v, bits=bits)
+            elif k == "experts" and quantize_experts and "gate" in v:
+                # stacked (L, E, D, F): scales per (layer, expert, channel)
+                out[k] = {
+                    name + "_q": quantize(
+                        w,
+                        channel_axes=tuple(range(w.ndim - 2)) + (w.ndim - 1,),
+                        bits=bits)
+                    for name, w in v.items()}
+            else:
+                out[k] = walk(v)
+        return out
+
+    return walk(params)

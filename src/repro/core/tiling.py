@@ -1,0 +1,138 @@
+"""Analytic tiling model — MAESTRO-flavored reuse accounting (paper §3/§4).
+
+The paper picks its tile sizes (T=32, BLOCK_M=256) from a BRAM/DSP budget and
+a routing-feasibility constraint.  On TPU the constraints are VMEM capacity
+and MXU alignment; this module does the same budgeting analytically so that
+
+  * ``ops.py`` can auto-select block shapes for arbitrary GEMM dims,
+  * ``benchmarks/tile_sweep.py`` can reproduce the paper's T∈{16,32,64} DSE
+    as a block-shape sweep with predicted-vs-ideal roofline numbers,
+  * tests can assert the invariants (footprint ≤ VMEM, full coverage).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# --- TPU v5e constants (single chip; brief §Roofline) ---------------------
+PEAK_BF16_FLOPS = 197e12          # FLOP/s
+PEAK_INT8_OPS = 394e12            # int8 MAC*2/s (2x bf16 on the MXU)
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link
+VMEM_BYTES = 128 * 1024 * 1024    # ~128 MiB usable VMEM per core
+MXU_DIM = 128                     # systolic array edge (the paper's "32")
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return ceil_div(x, m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """A two-level tiling of C[M,N] = A[M,K] @ B[K,N] (dtypes in bytes)."""
+    m: int
+    k: int
+    n: int
+    block_m: int
+    block_n: int
+    block_k: int            # == k for the panel-resident schedule
+    a_bytes: int = 1        # int8
+    b_bytes: int = 1
+    out_bytes: int = 2      # bf16
+    acc_bytes: int = 4      # int32 accumulator
+
+    @property
+    def k_steps(self) -> int:
+        return ceil_div(self.k, self.block_k)
+
+    # -- level-1 (VMEM) footprint ------------------------------------------
+    @property
+    def vmem_footprint(self) -> int:
+        a = self.block_m * self.block_k * self.a_bytes
+        b = self.block_k * self.block_n * self.b_bytes
+        out = self.block_m * self.block_n * self.out_bytes
+        acc = (self.block_m * self.block_n * self.acc_bytes
+               if self.k_steps > 1 else 0)
+        scales = (self.block_m + self.block_n) * 4
+        # double-buffering of the streamed operand (B) is the Pallas default
+        return a + 2 * b + out + acc + scales
+
+    def fits_vmem(self, budget: int = VMEM_BYTES) -> bool:
+        return self.vmem_footprint <= budget
+
+    # -- reuse / traffic model (MAESTRO-style temporal reuse) ---------------
+    @property
+    def hbm_traffic(self) -> int:
+        """Bytes moved HBM<->VMEM for the whole GEMM.
+
+        A row-panel is loaded once per M-block and reused across all N-blocks
+        (the paper's persistent-A reuse); B is re-streamed once per M-block;
+        C is written once.  With the K-split schedule the same holds per
+        (m,k)/(k,n) block pair.
+        """
+        m_blocks = ceil_div(self.m, self.block_m)
+        a = self.m * self.k * self.a_bytes                    # each A elem once
+        b = m_blocks * self.k * self.n * self.b_bytes         # B per M-block
+        c = self.m * self.n * self.out_bytes
+        return a + b + c
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.k * self.n
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / self.hbm_traffic
+
+    # -- single-chip roofline estimate --------------------------------------
+    def time_estimate(self, int8: bool = True) -> float:
+        peak = PEAK_INT8_OPS if int8 else PEAK_BF16_FLOPS
+        # MXU utilisation penalty when tile dims are not MXU-aligned — the
+        # TPU analogue of the paper's "T=16 reduced concurrency".
+        align = (min(self.block_m, MXU_DIM) / MXU_DIM) \
+            * (min(self.block_n, MXU_DIM) / MXU_DIM)
+        compute = self.flops / (peak * max(align, 1e-9))
+        memory = self.hbm_traffic / HBM_BW
+        return max(compute, memory)
+
+    @property
+    def bound(self) -> str:
+        compute = self.flops / PEAK_INT8_OPS
+        memory = self.hbm_traffic / HBM_BW
+        return "compute" if compute >= memory else "memory"
+
+
+def choose_plan(m: int, k: int, n: int, *,
+                out_bytes: int = 2,
+                vmem_budget: int = VMEM_BYTES // 2) -> TilePlan:
+    """Pick block shapes: the paper's DSE, automated.
+
+    Strategy (mirrors paper §5 "Tile size selection", with MXU=128 replacing
+    their DSP-array 32): prefer the panel-resident schedule (block_k == K,
+    maximal A reuse == `update_A`); shrink block_m/block_n from 512→128 in
+    MXU multiples until the footprint fits; if even the minimum panel does
+    not fit, fall back to the K-split schedule.
+    """
+    # a small M (e.g. the paper's 64-token panel) uses a sublane-aligned
+    # block rather than padding to the full MXU edge (50% fill beats 100%
+    # padded compute)
+    m_cap = round_up(m, 8) if m < MXU_DIM else round_up(m, MXU_DIM)
+    for bm in (512, 256, 128):
+        for bn in (512, 256, 128):
+            plan = TilePlan(m, k, n, block_m=min(bm, m_cap),
+                            block_n=min(bn, round_up(n, MXU_DIM)),
+                            block_k=k, out_bytes=out_bytes)
+            if plan.fits_vmem(vmem_budget):
+                return plan
+    # K-split fallback for very large K
+    for bk in (2048, 1024, 512, 256, 128):
+        if bk > k:
+            continue
+        plan = TilePlan(m, k, n, block_m=128, block_n=128,
+                        block_k=bk, out_bytes=out_bytes)
+        if plan.fits_vmem(vmem_budget):
+            return plan
+    raise ValueError(f"no feasible tiling for ({m},{k},{n})")

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash attention (online-softmax tiled attention).
+
+Beyond-paper companion kernel: the paper accelerates the Q/K/V projection
+GEMMs; this kernel accelerates the attention that consumes them with the
+same design vocabulary — two-level tiling (HBM→VMEM blocks feeding the
+MXU), persistent per-row state (running max/sum/accumulator live in VMEM
+scratch across the KV sweep, exactly the update_A persistence idea applied
+to softmax statistics), and a fused epilogue (the 1/l normalization).
+
+Layout: heads are pre-flattened into the leading grid dim (N = B·H); GQA
+group handling (KV broadcast across groups) happens in ops.py.
+
+Grid (n, i, j): j (KV blocks) innermost; VMEM scratch carries
+(acc f32 (qc, D), m (qc, 1), l (qc, 1)) across j.  Causal blocks fully
+above the diagonal are skipped with ``pl.when`` (compute guard — the copy
+engine still streams the block; a fully block-sparse schedule is the
+recorded next step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, softcap, q_chunk, kv_chunk, out_dtype):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: block (i, j) contributes only if any q_pos >= some k_pos,
+    # i.e. (i+1)*qc - 1 >= j*kc
+    run = (not causal) or ((i + 1) * q_chunk - 1 >= j * kv_chunk)
+
+    @pl.when(run if isinstance(run, bool) else run)
+    def _compute():
+        q = q_ref[0]                                   # (qc, D)
+        k = k_ref[0]                                   # (kc, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        if causal:
+            q_pos = i * q_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            k_pos = j * kv_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-37)).astype(out_dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           scale: float, causal: bool = True,
+                           softcap: float | None = None,
+                           q_chunk: int = 256, kv_chunk: int = 256,
+                           out_dtype=None, interpret: bool = False):
+    """q (N, S, D); k, v (N, T, D); S % q_chunk == 0, T % kv_chunk == 0."""
+    n, s_len, d = q.shape
+    t_len = k.shape[1]
+    q_chunk = min(q_chunk, s_len)
+    kv_chunk = min(kv_chunk, t_len)
+    assert s_len % q_chunk == 0 and t_len % kv_chunk == 0
+    out_dtype = out_dtype or q.dtype
+    grid = (n, s_len // q_chunk, t_len // kv_chunk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, softcap=softcap,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, d), lambda n_, i, j: (n_, i, 0)),
+            pl.BlockSpec((1, kv_chunk, d), lambda n_, i, j: (n_, j, 0)),
+            pl.BlockSpec((1, kv_chunk, d), lambda n_, i, j: (n_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, d), lambda n_, i, j: (n_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s_len, d), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_chunk, d), jnp.float32),
+            pltpu.VMEM((q_chunk, 1), jnp.float32),
+            pltpu.VMEM((q_chunk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

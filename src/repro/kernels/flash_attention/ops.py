@@ -1,0 +1,43 @@
+"""Jit'd wrapper for the flash-attention kernel with GQA + dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.tiled_matmul.ops import kernel_mode
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float | None = None, causal: bool = True,
+                    softcap: float | None = None,
+                    q_chunk: int = 256, kv_chunk: int = 256,
+                    mode: str | None = None) -> jax.Array:
+    """Multi-head attention, (B, S, H, D) q with (B, T, KH, D) kv (GQA).
+
+    Returns (B, S, H, D).  KV heads are broadcast across query groups.
+    """
+    mode = mode or kernel_mode()
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    k_rep = jnp.repeat(k, g, axis=2) if g > 1 else k
+    v_rep = jnp.repeat(v, g, axis=2) if g > 1 else v
+    kf = k_rep.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vf = v_rep.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+
+    if mode == "ref":
+        o = _ref.attention_ref(qf, kf, vf, scale=scale, causal=causal,
+                               softcap=softcap)
+    else:
+        o = flash_attention_kernel(
+            qf, kf, vf, scale=scale, causal=causal, softcap=softcap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+            interpret=(mode == "pallas_interpret"))
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel: dense softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  scale: float, causal: bool = True,
+                  softcap: float | None = None) -> jax.Array:
+    """q (N, S, D); k, v (N, T, D) → (N, S, D).  f32 softmax."""
+    s = jnp.einsum("nsd,ntd->nst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        sq, tk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(tk)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nst,ntd->nsd", p.astype(v.dtype), v)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused Q/K/V projection with a persistent A panel.
+
+This is the direct TPU analogue of the paper's ``update_A`` control flag
+(§4.2): "the host can choose to reuse the last loaded A matrix for subsequent
+calls — useful when processing multiple B batches with the same weights".
+The paper amortizes the DDR→BRAM load of A across the three Q/K/V weight
+matrices; here one ``pallas_call`` holds the activation panel (bm × K) in
+VMEM (its BlockSpec index_map is invariant in the N-sweep grid axis, so
+Pallas elides re-copies) while streaming Wq, Wk, Wv column blocks past it and
+writing three outputs.  A is fetched from HBM exactly once per row panel
+instead of three times.
+
+GQA support: Nk = Nv may be smaller than Nq (fewer KV heads).  The grid is
+sized for Q's column blocks; K/V stores are guarded with ``pl.when`` and
+their index maps clamped, so trailing grid steps only compute Q.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INT8_DOT = functools.partial(
+    jax.lax.dot_general,
+    dimension_numbers=(((1,), (0,)), ((), ())),
+    preferred_element_type=jnp.int32)
+
+
+def _dequant(acc, sa, sb, out_dtype):
+    return (acc.astype(jnp.float32)
+            * (sa.astype(jnp.float32) * sb.astype(jnp.float32))
+            ).astype(out_dtype)
+
+
+def _fused_qkv_kernel(a_ref, wq_ref, wk_ref, wv_ref,
+                      sa_ref, sq_ref, sk_ref, sv_ref,
+                      q_ref, k_ref, v_ref, *, nkv_blocks, out_dtype):
+    a = a_ref[...]            # (bm, K) int8 — persistent across the j sweep
+    sa = sa_ref[...]
+    q_ref[...] = _dequant(_INT8_DOT(a, wq_ref[...]), sa, sq_ref[...],
+                          out_dtype)
+
+    @pl.when(pl.program_id(1) < nkv_blocks)
+    def _kv():
+        k_ref[...] = _dequant(_INT8_DOT(a, wk_ref[...]), sa, sk_ref[...],
+                              out_dtype)
+        v_ref[...] = _dequant(_INT8_DOT(a, wv_ref[...]), sa, sv_ref[...],
+                              out_dtype)
+
+
+def fused_qkv_kernel(a_values, a_scale, wq, sq, wk, sk, wv, sv, *,
+                     block_m: int = 256, block_n: int = 256,
+                     out_dtype=jnp.bfloat16, interpret: bool = False):
+    """Shapes must be block multiples (ops.py pads partial tiles).
+
+    a_values (M, K) int8; a_scale (M, 1) f32
+    wq (K, Nq), wk/wv (K, Nkv) int8; sq (1, Nq), sk/sv (1, Nkv) f32
+    Returns (q (M, Nq), k (M, Nkv), v (M, Nkv)) in out_dtype.
+    """
+    m, k = a_values.shape
+    nq = wq.shape[1]
+    nkv = wk.shape[1]
+    assert wv.shape[1] == nkv and m % block_m == 0
+    assert nq % block_n == 0 and nkv % block_n == 0
+    nq_blocks = nq // block_n
+    nkv_blocks = nkv // block_n
+    assert nkv_blocks <= nq_blocks, "Q must have >= as many column blocks"
+
+    clamp = nkv_blocks - 1
+
+    def kv_map(i, j):
+        return (0, jnp.minimum(j, clamp))
+
+    def kv_out_map(i, j):
+        return (i, jnp.minimum(j, clamp))
+
+    def kv_scale_map(i, j):
+        return (0, jnp.minimum(j, clamp))
+
+    grid = (m // block_m, nq_blocks)
+    kernel = functools.partial(_fused_qkv_kernel, nkv_blocks=nkv_blocks,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),  # A persistent
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),  # Wq streamed
+            pl.BlockSpec((k, block_n), kv_map),               # Wk streamed
+            pl.BlockSpec((k, block_n), kv_map),               # Wv streamed
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_n), kv_scale_map),
+            pl.BlockSpec((1, block_n), kv_scale_map),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m, block_n), kv_out_map),
+            pl.BlockSpec((block_m, block_n), kv_out_map),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, nq), out_dtype),
+            jax.ShapeDtypeStruct((m, nkv), out_dtype),
+            jax.ShapeDtypeStruct((m, nkv), out_dtype),
+        ),
+        interpret=interpret,
+    )(a_values, wq, wk, wv, a_scale, sq, sk, sv)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for fused row-wise activation quantization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_act_ref(x: jax.Array, qmax: int = 127):
+    """Per-row symmetric absmax quantization of activations.
+
+    x: (M, K) float → (values int8 (M, K), scale f32 (M, 1)).
+    Matches core.quantization.quantize(x, channel_axes=(0,)) exactly.
+    """
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
+    scale = jnp.where(absmax <= 1e-12, 1.0, absmax / qmax)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale

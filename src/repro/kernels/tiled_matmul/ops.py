@@ -1,0 +1,97 @@
+"""Public jit'd wrapper for the tiled int8 GEMM.
+
+Handles: partial tiles (zero-padding, exact for int8 — paper §5 "Handling
+partial tiles"), block-shape auto-selection via the analytic tiling model,
+and backend dispatch:
+
+  REPRO_KERNELS=ref                -> pure-jnp oracle (default on CPU: the
+                                      multi-pod dry-run compiles this path)
+  REPRO_KERNELS=pallas_interpret   -> Pallas kernel, interpret mode (tests)
+  REPRO_KERNELS=pallas             -> compiled Pallas kernel (real TPU)
+
+Both paths share the same dequant-epilogue math, so results are bitwise
+identical; tests assert this across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, quantize
+from repro.core.tiling import MXU_DIM, choose_plan, round_up
+from repro.kernels.tiled_matmul import ref as _ref
+from repro.kernels.tiled_matmul.kernel import tiled_matmul_kernel
+
+__all__ = ["tiled_matmul", "quantized_matmul", "kernel_mode"]
+
+
+def kernel_mode() -> str:
+    mode = os.environ.get("REPRO_KERNELS", "")
+    if mode:
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def tiled_matmul(a: QTensor, b: QTensor, bias: jax.Array | None = None, *,
+                 block_m: int | None = None, block_n: int | None = None,
+                 block_k: int | None = None,
+                 out_dtype=jnp.bfloat16,
+                 mode: str | None = None) -> jax.Array:
+    """C = dequant(A_q @ B_q) + bias for quantized operands.
+
+    ``a``: QTensor (M, K) with per-row (M,1) / per-tensor scale.
+    ``b``: QTensor (K, N) with per-col (1,N) / per-tensor scale.
+    """
+    mode = mode or kernel_mode()
+    m, k = a.values.shape
+    _, n = b.values.shape
+    a_scale = jnp.broadcast_to(a.scale.astype(jnp.float32), (m, 1))
+    b_scale = jnp.broadcast_to(b.scale.astype(jnp.float32), (1, n))
+
+    if mode == "ref":
+        return _ref.tiled_matmul_ref(a.values, a_scale, b.values, b_scale,
+                                     bias, out_dtype)
+
+    interpret = mode == "pallas_interpret"
+    if block_m is None or block_n is None:
+        plan = choose_plan(m, k, n, out_bytes=jnp.dtype(out_dtype).itemsize)
+        block_m = block_m or plan.block_m
+        block_n = block_n or plan.block_n
+        if block_k is None and plan.k_steps > 1:
+            block_k = plan.block_k
+
+    # Partial tiles: zero-pad up to block multiples (exact in int8).
+    mp = round_up(m, block_m)
+    np_ = round_up(n, block_n)
+    kp = round_up(k, block_k) if block_k else round_up(k, MXU_DIM)
+    av = jnp.pad(a.values, ((0, mp - m), (0, kp - k)))
+    bv = jnp.pad(b.values, ((0, kp - k), (0, np_ - n)))
+    sa = jnp.pad(a_scale, ((0, mp - m), (0, 0)), constant_values=1.0)
+    sb = jnp.pad(b_scale, ((0, 0), (0, np_ - n)), constant_values=1.0)
+    bi = (jnp.pad(bias.reshape(1, -1).astype(jnp.float32),
+                  ((0, 0), (0, np_ - n)))
+          if bias is not None else None)
+
+    out = tiled_matmul_kernel(av, sa, bv, sb, bi,
+                              block_m=block_m, block_n=block_n,
+                              block_k=block_k, out_dtype=out_dtype,
+                              interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "mode",
+                                             "act_bits"))
+def quantized_matmul(x: jax.Array, w: QTensor,
+                     bias: jax.Array | None = None, *,
+                     out_dtype=jnp.bfloat16, mode: str | None = None,
+                     act_bits: int = 8) -> jax.Array:
+    """Dynamic-activation-quant GEMM: quantize x per-row then tiled_matmul.
+
+    This is the FPGAQuantizedLinear inner loop (paper §6.2): quantize input
+    activations to int8, offload the int8 GEMM, dequantize + bias.
+    """
+    xq = quantize(x, channel_axes=(0,), bits=act_bits)
+    return tiled_matmul(xq, w, bias, out_dtype=out_dtype, mode=mode)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the tiled int8 GEMM (paper Algorithm 1).
+
+This is the numerics contract: the Pallas kernel must match this bit-for-bit
+for the int8→int32 accumulation and the scale epilogue (exact integer math +
+identical f32 op order).  The only permitted slack is ≤1 ULP on the bias add,
+where XLA may contract multiply+add into an FMA differently between the two
+programs.  Tests assert exact equality without bias and ≤1e-6 atol with it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tiled_matmul_ref(a_values: jax.Array, a_scale: jax.Array,
+                     b_values: jax.Array, b_scale: jax.Array,
+                     bias: jax.Array | None = None,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """C = dequant(int8 A @ int8 B) + bias.
+
+    a_values: (M, K) int8     a_scale: broadcastable to (M, 1) f32
+    b_values: (K, N) int8     b_scale: broadcastable to (1, N) f32
+    bias:     (N,) or (1, N) f32 or None
+    """
+    acc = jax.lax.dot_general(
+        a_values, b_values, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * (a_scale.astype(jnp.float32)
+                                     * b_scale.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.reshape(1, -1).astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def matmul_f32_oracle(a: jax.Array, b: jax.Array,
+                      bias: jax.Array | None = None) -> jax.Array:
+    """Unquantized fp32 reference — the accuracy yardstick (paper §6.2)."""
+    out = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.reshape(1, -1).astype(jnp.float32)
+    return out

@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import/init: jax locks the device count on first
+# use.  512 host devices back the production meshes (16×16 and 2×16×16).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (launch/mesh.py),
+  2. eval_shapes the model/optimizer state (no allocation — everything is
+     ShapeDtypeStruct),
+  3. resolves parameter/cache/batch shardings from the logical rules
+     (FSDP rules for train cells; int8-quantized serving params otherwise),
+  4. jits the step with in/out shardings, ``.lower()``s with abstract
+     inputs and ``.compile()``s — any sharding mismatch, compile-time OOM
+     or unsupported collective fails here,
+  5. prints ``memory_analysis()`` / ``cost_analysis()`` and writes the
+     roofline record (JSON) for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.core.quantize_params import quantize_model_params
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (ENCDEC_DECODE_MEMORY_LEN, SHAPES, ShapeCell,
+                                 cells_for)
+from repro.launch.sharding import (activate_sharding,
+                                   make_activation_rules, make_param_rules,
+                                   param_specs, spec_for, tree_specs)
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_model
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import warmup_cosine
+from repro.roofline.model_flops import model_flops
+from repro.roofline.report import build_roofline
+from repro.serving.cache import cache_logical_axes, init_cache
+from repro.serving.engine import prefill_step, serve_step
+from repro.training.train_step import TrainState, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract state/input construction (ShapeDtypeStruct everywhere)
+# ---------------------------------------------------------------------------
+def params_shape_for(cfg: ModelConfig, *, quantized: bool):
+    def build(key):
+        p = init_model(key, cfg)
+        if quantized:
+            # experts quantized too (beyond-paper §Perf extension): halves
+            # the dominant weight-streaming term for MoE serving
+            p = quantize_model_params(p, quantize_experts=cfg.is_moe)
+        return p
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = cell.global_batch, cell.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cell.kind == "train":
+        s_text = s - (cfg.frontend_len if cfg.frontend == "vision" else 0)
+        specs = {"inputs": sds((b, s_text), jnp.int32),
+                 "targets": sds((b, s_text), jnp.int32)}
+        if cfg.frontend == "vision":
+            specs["frontend_embeds"] = sds((b, cfg.frontend_len, cfg.d_model),
+                                           jnp.float32)
+        if cfg.is_encoder_decoder:
+            specs["encoder_frames"] = sds((b, s, cfg.d_model), jnp.float32)
+        return specs
+    if cell.kind == "prefill":
+        s_text = s - (cfg.frontend_len if cfg.frontend == "vision" else 0)
+        specs = {"tokens": sds((b, s_text), jnp.int32)}
+        if cfg.frontend == "vision":
+            specs["frontend_embeds"] = sds((b, cfg.frontend_len, cfg.d_model),
+                                           jnp.float32)
+        if cfg.is_encoder_decoder:
+            specs["encoder_frames"] = sds((b, s, cfg.d_model), jnp.float32)
+        return specs
+    # decode
+    specs = {"tokens": sds((b, 1), jnp.int32),
+             "pos": sds((), jnp.int32),
+             "cache": jax.eval_shape(
+                 functools.partial(init_cache, cfg, b, s), )}
+    if cfg.is_encoder_decoder:
+        specs["memory"] = sds((b, ENCDEC_DECODE_MEMORY_LEN, cfg.d_model),
+                              jnp.float32)
+    return specs
+
+
+def batch_logical_axes(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    if cell.kind == "train":
+        axes = {"inputs": ("batch", None), "targets": ("batch", None)}
+        if cfg.frontend == "vision":
+            axes["frontend_embeds"] = ("batch", None, None)
+        if cfg.is_encoder_decoder:
+            axes["encoder_frames"] = ("batch", None, None)
+        return axes
+    if cell.kind == "prefill":
+        axes = {"tokens": ("batch", None)}
+        if cfg.frontend == "vision":
+            axes["frontend_embeds"] = ("batch", None, None)
+        if cfg.is_encoder_decoder:
+            axes["encoder_frames"] = ("batch", None, None)
+        return axes
+    axes = {"tokens": ("batch", None), "pos": ()}
+    if cfg.is_encoder_decoder:
+        axes["memory"] = ("batch", None, None)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Per-cell lowering
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               quant: str = "w8a8", verbose: bool = True,
+               cfg_overrides: dict | None = None,
+               param_rules_override=None, microbatches: int = 4) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.size
+
+    if cell.kind == "train":
+        cfg = cfg.replace(quant_proj="none", dtype="bfloat16")
+    else:
+        cfg = cfg.replace(quant_proj=quant, dtype="bfloat16")
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+
+    t0 = time.time()
+    quantized = cell.kind != "train" and quant != "none"
+    p_shape = params_shape_for(cfg, quantized=quantized)
+
+    # parallelism profile: pure-DP for small models (TP of a <2B model is
+    # collective-bound for no memory benefit), TP(+FSDP for train) otherwise
+    import numpy as np
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p_shape))
+    profile = cfg.parallelism
+    if profile == "auto":
+        profile = "dp" if n_params < 2_000_000_000 else "tp"
+
+    p_rules = param_rules_override or make_param_rules(
+        fsdp=(cell.kind == "train"), profile=profile)
+    act_rules = make_activation_rules(profile)
+    p_specs = param_specs(p_shape, mesh, p_rules)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+    inputs = input_specs(cfg, cell)
+    in_axes = batch_logical_axes(cfg, cell)
+
+    def in_sharding_for(name):
+        leaf = inputs[name]
+        if name == "cache":
+            c_axes = cache_logical_axes(cfg)
+            specs = tree_specs(leaf, c_axes, mesh, act_rules)
+            return {k: NamedSharding(mesh, v) for k, v in specs.items()}
+        spec = spec_for(tuple(leaf.shape), in_axes[name], mesh, act_rules)
+        return NamedSharding(mesh, spec)
+
+    with activate_sharding(mesh, act_rules, param_rules=p_rules):
+        if cell.kind == "train":
+            opt = AdamW(learning_rate=warmup_cosine(3e-4, 100, 10_000))
+            step = make_train_step(cfg, opt, microbatches=microbatches)
+            zero1 = cfg.dtype == "bfloat16"
+            state_shape = jax.eval_shape(
+                lambda p: TrainState.create(p, opt, zero1=zero1), p_shape)
+            # ZeRO-1: compute params TP-only (replicated over data — no
+            # fwd/bwd weight gathers); master + moments FSDP over data
+            compute_rules = make_param_rules(fsdp=False, profile=profile)
+            c_specs = param_specs(p_shape, mesh, compute_rules)
+            c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                                is_leaf=lambda x: isinstance(x, P))
+            state_sh = TrainState(
+                params=c_sh,
+                opt_state=type(state_shape.opt_state)(
+                    mu=p_sh, nu=p_sh,
+                    count=NamedSharding(mesh, P())),
+                step=NamedSharding(mesh, P()),
+                master=(p_sh if zero1 else None))
+            batch_sh = {k: in_sharding_for(k) for k in inputs}
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shape, inputs)
+        elif cell.kind == "prefill":
+            def pf(params, batch):
+                return prefill_step(
+                    params, batch["tokens"], cfg,
+                    frontend_embeds=batch.get("frontend_embeds"),
+                    encoder_frames=batch.get("encoder_frames"))
+            batch_sh = {k: in_sharding_for(k) for k in inputs}
+            jitted = jax.jit(pf, in_shardings=(p_sh, batch_sh))
+            lowered = jitted.lower(p_shape, inputs)
+        else:
+            def dc(params, cache, tokens, pos, memory=None):
+                return serve_step(params, cache, tokens, pos, cfg,
+                                  memory=memory)
+            cache_sh = in_sharding_for("cache")
+            args_sh = [p_sh, cache_sh, in_sharding_for("tokens"),
+                       in_sharding_for("pos")]
+            args = [p_shape, inputs["cache"], inputs["tokens"],
+                    inputs["pos"]]
+            if cfg.is_encoder_decoder:
+                args_sh.append(in_sharding_for("memory"))
+                args.append(inputs["memory"])
+            jitted = jax.jit(dc, in_shardings=tuple(args_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(*args)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    mflops = model_flops(cfg, p_shape, kind=cell.kind, tokens=tokens,
+                         kv_len=cell.seq_len, batch=cell.global_batch)
+    roof = build_roofline(arch=arch, shape=shape_name, mesh_name=mesh_name,
+                          chips=chips, cost=cost, memstats=mem,
+                          hlo_text=hlo, model_flops=mflops)
+    rec = roof.to_dict()
+    rec.update({
+        "profile": profile, "n_params": n_params,
+        "quant": quant if cell.kind != "train" else "none",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "arg_bytes": mem.argument_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "code_bytes": mem.generated_code_size_in_bytes,
+    })
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] "
+              f"compile {t_compile:.0f}s  "
+              f"args {mem.argument_size_in_bytes/2**30:.2f}GiB  "
+              f"temp {mem.temp_size_in_bytes/2**30:.2f}GiB  "
+              f"flops/dev {rec['hlo_flops']:.3e}  "
+              f"coll/dev {rec['coll_bytes']/2**20:.1f}MiB  "
+              f"bound={rec['bound']}  "
+              f"roofline_frac={rec['roofline_fraction']:.3f}")
+        print("  memory_analysis:", mem)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", default="w8a8",
+                    choices=["none", "w8", "w8a8"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    if args.all:
+        for arch in ARCHITECTURES:
+            if arch == "distilbert_paper":
+                continue
+            cfg = get_config(arch)
+            for shape_name in cells_for(cfg):
+                todo.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in todo:
+        mesh_tag = "multi" if args.multi_pod else "single"
+        out_path = os.path.join(
+            args.out, f"{arch}__{shape_name}__{mesh_tag}.json")
+        try:
+            rec = lower_cell(arch, shape_name, multi_pod=args.multi_pod,
+                             quant=args.quant)
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:  # noqa: BLE001 — report and continue sweep
+            failures.append((arch, shape_name, repr(e)))
+            print(f"[{arch} × {shape_name}] FAILED: {e!r}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(todo)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

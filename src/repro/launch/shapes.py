@@ -1,0 +1,42 @@
+"""Assigned input-shape registry (the 4 shape cells per architecture).
+
+  train_4k    seq 4096,   global_batch 256   -> train_step
+  prefill_32k seq 32768,  global_batch 32    -> prefill_step
+  decode_32k  cache 32768, global_batch 128  -> serve_step (1 new token)
+  long_500k   cache 524288, global_batch 1   -> serve_step (1 new token)
+
+Skips (DESIGN.md §4): long_500k only for ssm/hybrid families; all other
+cells run for every arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+# families allowed to run long_500k (sub-quadratic decode state)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+# encoder memory length stub for enc-dec decode cells (DESIGN.md)
+ENCDEC_DECODE_MEMORY_LEN = 4096
+
+
+def cells_for(cfg) -> list[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in LONG_OK_FAMILIES:
+        names.append("long_500k")
+    return names

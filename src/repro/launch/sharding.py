@@ -1,0 +1,296 @@
+"""Logical-axis sharding: rules, activation context, and param-spec trees.
+
+Models annotate activations with *logical* axis names via ``shard(x, ...)``;
+a launch-time context maps those to mesh axes (no-op outside the context).
+Parameter PartitionSpecs come from path-based rules over the params pytree.
+
+Policies (DESIGN.md §3):
+  * shard-if-divisible — a dim that does not divide the mesh-axis extent is
+    replicated, not GSPMD-padded (explicit and predictable).
+  * candidate chains — a logical axis lists mesh-axis candidates in
+    preference order; the first whose extent divides the dim and whose mesh
+    axes are not already used by another dim of the same array wins.
+    e.g. ``kv_seq``: ("pod","data","model") → ("data","model") → "model",
+    so a batch=1 long-context decode spreads its KV over every chip while a
+    batched decode (batch already on data) split only over model.
+  * FSDP — training cells pass ``fsdp=True`` param rules: the ``embed`` and
+    ``experts`` param dims additionally shard over ``data`` (ZeRO-3-style;
+    GSPMD materializes the per-layer all-gathers inside the scan).  Serving
+    params stay model-sharded only (int8 already divides memory by 4).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# Activation rules
+# --------------------------------------------------------------------------
+DEFAULT_LOGICAL_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"), "data"),
+    "seq": (("pod", "data"), "data"),
+    "kv_seq": (("pod", "data", "model"), ("data", "model"), "model"),
+    "vocab": ("model",),
+    "embed": (None,),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_state": (None,),
+    "table_embed": (None,),
+    # residual-stream seq dim between blocks (Megatron sequence parallelism):
+    # makes the per-layer checkpointed activations 1/|model| sized; GSPMD
+    # materializes the all-gather before QKV and the reduce-scatter after
+    # the output projections.
+    "act_seq": ("model",),
+}
+
+# --------------------------------------------------------------------------
+# Param rules (path-pattern -> logical axes, right-aligned; first match wins)
+# QTensor leaves appear as <proj>/w_q/values and <proj>/w_q/scale; the scale
+# has size-1 dims wherever it is shared, so the same logical axes apply (a
+# size-1 dim never divides the axis extent and is auto-replicated).
+# --------------------------------------------------------------------------
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # tables use a dedicated embed-dim logical axis that FSDP must NOT move
+    # to `data`: an embed-dim-sharded table turns the unembed contraction
+    # into a full-logits all-reduce (12 GiB/step for a 50k vocab).
+    (r"embed/table", ("vocab", "table_embed")),
+    (r"lm_head/w", ("vocab", "table_embed")),
+    (r"wq/(w|w_q/values|w_q/scale)$", ("embed", "heads")),
+    (r"(wk|wv)/(w|w_q/values|w_q/scale)$", ("embed", "kv_heads")),
+    (r"wq/b$", ("heads",)),
+    (r"(wk|wv)/b$", ("kv_heads",)),
+    (r"wo/(w|w_q/values|w_q/scale)$", ("heads", "embed")),
+    (r"(gate|up)/(w|w_q/values|w_q/scale)$", ("embed", "mlp")),
+    (r"down/(w|w_q/values|w_q/scale)$", ("mlp", "embed")),
+    (r"router/w", ("embed", None)),
+    (r"experts/(gate|up)", ("experts", "embed", "expert_mlp")),
+    (r"experts/down", ("experts", "expert_mlp", "embed")),
+    (r"in_(z|x)/(w|w_q/values|w_q/scale)$", ("embed", "ssm_inner")),
+    (r"in_(B|C|dt)/(w|w_q/values|w_q/scale)$", ("embed", None)),
+    (r"out_proj/(w|w_q/values|w_q/scale)$", ("ssm_inner", "embed")),
+    (r"conv_x/w", (None, "ssm_inner")),
+    (r"conv_(B|C)/w", (None, None)),
+    (r"ssm/(A_log|D|dt_bias)", (None,)),
+    (r"norm", (None,)),
+    (r"(q_norm|k_norm)", (None,)),
+    (r"/b$", (None,)),
+]
+
+
+def make_activation_rules(profile: str = "tp") -> dict:
+    """Activation rules per parallelism profile.
+
+    "tp": batch over DP axes, tensor parallel over `model` (default for
+    large models).  "dp": batch claims ALL axes (including `model`) when it
+    divides — pure data parallelism; per-array conflict resolution then
+    auto-disables the TP rules (a dim can't use an axis batch already
+    took).  Small models (mamba2-370m, seamless-m4t) are DP: 16-way TP of a
+    370M model makes every layer collective-bound for no memory benefit.
+    """
+    rules = dict(DEFAULT_LOGICAL_RULES)
+    if profile == "dp":
+        rules["batch"] = (("pod", "data", "model"), ("data", "model"),
+                          ("pod", "data"), "data")
+        rules["seq"] = rules["batch"]
+    return rules
+
+
+def make_param_rules(fsdp: bool = False, profile: str = "tp") -> dict:
+    """Logical→mesh rules for *parameters* (distinct from activations)."""
+    rules = dict(DEFAULT_LOGICAL_RULES)
+    if profile == "dp":
+        # no tensor parallelism for params; FSDP (train) shards storage over
+        # BOTH axes since batch occupies them anyway
+        for k in ("heads", "kv_heads", "mlp", "experts", "expert_mlp",
+                  "ssm_heads", "ssm_inner", "vocab"):
+            rules[k] = (None,)
+        if fsdp:
+            rules["embed"] = (("data", "model"), "data")
+            rules["mlp"] = (("data", "model"), "data")
+            rules["expert_mlp"] = (("data", "model"), "data")
+        return rules
+    if fsdp:
+        rules["embed"] = ("data",)          # ZeRO-3 storage shard
+        rules["experts"] = ("data",)        # expert-dim storage shard
+    return rules
+
+
+_active: contextvars.ContextVar[Optional[tuple]] = \
+    contextvars.ContextVar("repro_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activate_sharding(mesh: Mesh, rules: dict | None = None,
+                      param_rules: dict | None = None):
+    """Enable with_sharding_constraint annotations inside model code."""
+    token = _active.set((mesh, rules or DEFAULT_LOGICAL_RULES, param_rules))
+    try:
+        yield
+    finally:
+        _active.reset(token)
+
+
+def active_mesh() -> Mesh | None:
+    ctx = _active.get()
+    return ctx[0] if ctx else None
+
+
+def shard_like_params(tree):
+    """Constrain a params-shaped tree (e.g. the gradient accumulator) to
+    the parameter shardings.  Without this the per-microbatch gradient sync
+    compiles as a full all-reduce; with it GSPMD emits the FSDP
+    reduce-scatter (half the bytes, and the optimizer update stays local)."""
+    ctx = _active.get()
+    if ctx is None or ctx[2] is None:
+        return tree
+    mesh, _, prules = ctx
+
+    def leaf(path, x):
+        axes = logical_axes_for_path(_path_str(path), x.ndim)
+        spec = spec_for(tuple(x.shape), axes, mesh, prules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def model_axis_size() -> int | None:
+    """Extent of the 'model' mesh axis inside a sharding context, else None."""
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return None
+    return int(mesh.shape["model"])
+
+
+def _mesh_axes_for(logical: str | None, dim: int, mesh: Mesh,
+                   rules: dict, used: set) -> Any:
+    if logical is None:
+        return None
+    for candidate in rules.get(logical, (None,)):
+        if candidate is None:
+            return None
+        axes = candidate if isinstance(candidate, tuple) else (candidate,)
+        if not all(a in mesh.shape for a in axes):
+            continue
+        if any(a in used for a in axes):
+            continue
+        extent = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % extent == 0:
+            return candidate
+    return None
+
+
+def spec_for(shape: tuple, logical_axes: tuple, mesh: Mesh,
+             rules: dict | None = None) -> P:
+    rules = rules or DEFAULT_LOGICAL_RULES
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        res = _mesh_axes_for(name, dim, mesh, rules, used)
+        if res is not None:
+            used.update(res if isinstance(res, tuple) else (res,))
+        out.append(res)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """Annotate an activation with logical axes (no-op outside a context)."""
+    ctx = _active.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx[0], ctx[1]
+    spec = spec_for(x.shape, tuple(logical_axes), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_logits(x: jax.Array) -> jax.Array:
+    """Shard (B, S, V) logits: vocab over `model` when divisible, else the
+    sequence dim — an f32 logits buffer over a 100k+ vocab is the largest
+    single activation in small-model training and must never be replicated
+    (it was 3×12 GiB/device for mamba2-370m before this rule)."""
+    ctx = _active.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    mesh, rules = ctx[0], ctx[1]
+    b, s, v = x.shape
+    msize = int(mesh.shape.get("model", 1))
+    batch_axes = _mesh_axes_for("batch", b, mesh, rules, set())
+    flat_batch = (batch_axes if isinstance(batch_axes, tuple)
+                  else (batch_axes,))
+    if "model" in flat_batch or msize == 1:   # dp profile: model taken
+        spec = P(batch_axes, None, None)
+    elif v % msize == 0:
+        spec = P(batch_axes, None, "model")
+    elif s % msize == 0 and s > 1:
+        spec = P(batch_axes, "model", None)
+    else:
+        spec = P(batch_axes, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p).lstrip("."))
+    return "/".join(parts)
+
+
+def logical_axes_for_path(path_str: str, ndim: int) -> tuple:
+    for pattern, axes in PARAM_RULES:
+        if re.search(pattern, path_str):
+            if len(axes) < ndim:      # left-pad (layer-stacked leading dims)
+                axes = (None,) * (ndim - len(axes)) + tuple(axes)
+            elif len(axes) > ndim:
+                axes = tuple(axes[-ndim:]) if ndim else ()
+            return tuple(axes)
+    return (None,) * ndim
+
+
+def param_specs(params_shape: Any, mesh: Mesh,
+                rules: dict | None = None) -> Any:
+    """PartitionSpec tree for a params(-shaped) pytree."""
+    rules = rules or make_param_rules()
+
+    def leaf_spec(path, leaf):
+        axes = logical_axes_for_path(_path_str(path), len(leaf.shape))
+        return spec_for(tuple(leaf.shape), axes, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh,
+                    rules: dict | None = None) -> Any:
+    specs = param_specs(params_shape, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def tree_specs(tree_shape: Any, logical_axes_tree: dict, mesh: Mesh,
+               rules: dict | None = None) -> Any:
+    """Specs for an ad-hoc tree (e.g. cache) given explicit logical axes."""
+    rules = rules or DEFAULT_LOGICAL_RULES
+
+    def one(leaf, axes):
+        return spec_for(tuple(leaf.shape), tuple(axes), mesh, rules)
+
+    return {k: one(tree_shape[k], logical_axes_tree[k])
+            for k in tree_shape}

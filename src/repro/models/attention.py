@@ -1,0 +1,240 @@
+"""Attention: MHA/GQA/MQA with RoPE variants, sliding window, softcap,
+QK-norm, cross-attention, KV cache, and blockwise (flash-style) execution.
+
+The Q/K/V projections — the paper's target bottleneck — route through
+``core.qkv_fusion.apply_fused_qkv`` (the persistent-A / update_A mechanism)
+or ``core.quantized_linear.apply_linear`` under the config's ``quant_proj``
+mode.  Long sequences use a double-chunked online-softmax attention
+(never materializing S×T scores), required for the 32k prefill cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized_linear import apply_linear, init_linear
+from repro.core.qkv_fusion import apply_fused_qkv
+from repro.launch.sharding import model_axis_size, shard
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, apply_rope, init_norm, softcap
+
+Params = dict
+NEG_INF = -2.3819763e38  # finite min-bf16-safe mask value
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, *,
+                   cross: bool = False) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p: Params = {
+        "wq": init_linear(kq, cfg.d_model, cfg.q_dim, use_bias=cfg.qkv_bias),
+        "wk": init_linear(kk, cfg.d_model, cfg.kv_dim, use_bias=cfg.qkv_bias),
+        "wv": init_linear(kv, cfg.d_model, cfg.kv_dim, use_bias=cfg.qkv_bias),
+        "wo": init_linear(ko, cfg.q_dim, cfg.d_model, use_bias=False,
+                          scale=(cfg.q_dim ** -0.5) / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(cfg, cfg.head_dim)
+        p["k_norm"] = init_norm(cfg, cfg.head_dim)
+    return p
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window, is_local) -> jax.Array:
+    """(…, S, T) additive bias from position comparisons."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    allowed = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        allowed &= kp <= qp
+    if window is not None:
+        in_window = kp > qp - window
+        use_local = jnp.asarray(is_local, bool)
+        allowed &= in_window | ~use_local
+    return jnp.where(allowed, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_dense(q, k, v, q_pos, k_pos, *, scale, cap, causal, window,
+                  is_local):
+    """q (B,S,K,G,hd); k,v (B,T,K,hd) → (B,S,K,G,hd).  Scores in f32."""
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                       is_local=is_local)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return o
+
+
+def _attend_blockwise(q, k, v, q_offset, *, scale, cap, causal, window,
+                      is_local, q_chunk, kv_chunk):
+    """Double-chunked online-softmax attention (flash-style, pure jnp).
+
+    Never materializes more than (B,K,G,q_chunk,kv_chunk) scores; math is
+    identical to softmax attention (tests assert vs the dense path).
+    """
+    b, s_len, kh, g, hd = q.shape
+    t_len = k.shape[1]
+    q_chunk = min(q_chunk, s_len)
+    kv_chunk = min(kv_chunk, t_len)
+    assert s_len % q_chunk == 0 and t_len % kv_chunk == 0
+    nq, nk = s_len // q_chunk, t_len // kv_chunk
+
+    q_r = q.reshape(b, nq, q_chunk, kh, g, hd).swapaxes(0, 1)
+    k_r = k.reshape(b, nk, kv_chunk, kh, hd).swapaxes(0, 1)
+    v_r = v.reshape(b, nk, kv_chunk, kh, hd).swapaxes(0, 1)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        # checkpointed: without this the scan's backward saves every
+        # (q_chunk × kv_chunk) score block — i.e. the full S×T attention
+        # matrix — defeating the point of blockwise attention.  With it the
+        # bwd recomputes scores per block (flash-attention-2 style).
+        @jax.checkpoint
+        def kv_step(carry, kj_kc_vc):
+            acc, m, l = carry
+            kj, kc, vc = kj_kc_vc
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bskgh,btkh->bkgst", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cap)
+            s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                               is_local=is_local)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkh->bkgsh", p, vc.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kh, g, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (jnp.arange(nk), k_r, v_r))
+        o = acc / jnp.maximum(l, 1e-37)[..., None]
+        return None, o.astype(q.dtype)      # (b,kh,g,qc,hd)
+
+    _, o = jax.lax.scan(q_step, None, (jnp.arange(nq), q_r))
+    # (nq,b,kh,g,qc,hd) → (b, s, kh, g, hd)
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(b, s_len, kh, g, hd)
+    return o
+
+
+def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
+                    positions: jax.Array,
+                    is_local=False,
+                    causal: bool = True,
+                    memory: jax.Array | None = None,
+                    cache: tuple[jax.Array, jax.Array] | None = None,
+                    cache_pos: jax.Array | None = None):
+    """Self- or cross-attention.
+
+    x: (B, S, D).  memory: (B, T, D) for cross-attention (no cache, no rope).
+    cache: (k, v) each (B, S_max, K, hd) — decode mode; new kv written at
+    ``cache_pos`` (scalar step index) and attention runs over the cache.
+    Returns (y, new_cache or None).
+    """
+    b, s, _ = x.shape
+    kh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.head_dim
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    kv_src = memory if memory is not None else x
+
+    if memory is None and cfg.fuse_qkv:
+        q, k, v = apply_fused_qkv(params["wq"], params["wk"], params["wv"],
+                                  x, mode=cfg.quant_proj)
+    else:
+        q = apply_linear(params["wq"], x, mode=cfg.quant_proj)
+        k = apply_linear(params["wk"], kv_src, mode=cfg.quant_proj)
+        v = apply_linear(params["wv"], kv_src, mode=cfg.quant_proj)
+
+    q = _split_heads(q, cfg.n_heads, hd)
+    k = _split_heads(k, kh, hd)
+    v = _split_heads(v, kh, hd)
+
+    if cfg.qk_norm:
+        q = apply_norm(params["q_norm"], q, cfg)
+        k = apply_norm(params["k_norm"], k, cfg)
+
+    if memory is None:                       # rope only on self-attention
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cache_pos, 0, 0))
+        new_cache = (ck, cv)
+        k, v = ck, cv
+        k_pos = jnp.arange(k.shape[1])
+        q_pos = positions
+    else:
+        k_pos = (positions if memory is None
+                 else jnp.arange(kv_src.shape[1]))
+        q_pos = positions
+
+    # GQA execution layout: grouped (K sharded over `model`) when the KV-head
+    # count divides the model axis; otherwise repeat KV up to the full head
+    # count so attention compute still shards over heads (mistral: kv=8 on a
+    # 16-way model axis).  The KV *cache* always stores the true kv_heads.
+    # Decode exception: with the cache seq-split over `model`, the work is
+    # already distributed over T — repeating KV would only multiply the
+    # dominant KV-streaming bytes by the group size (12x for mistral), so
+    # the grouped layout is kept (§Perf, mistral decode_32k).
+    msize = model_axis_size()
+    if (msize is None or kh % msize == 0 or g == 1
+            or cache is not None):
+        q = q.reshape(b, s, kh, g, hd)
+    else:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        kh, g = cfg.n_heads, 1
+        q = q.reshape(b, s, kh, g, hd)
+
+    q = shard(q, "batch", None, "kv_heads", None, None)
+    k = shard(k, "batch", "kv_seq" if cache is not None else None,
+              "kv_heads", None)
+    v = shard(v, "batch", "kv_seq" if cache is not None else None,
+              "kv_heads", None)
+
+    use_blockwise = (cache is None and memory is None
+                     and s >= cfg.blockwise_attn_threshold)
+    # On a real TPU the flash-attention Pallas kernel replaces the jnp
+    # blockwise path for the no-window/no-cache case (identical math —
+    # tests/test_flash_attention.py); sliding-window support in-kernel is
+    # the recorded next step, so gemma2's local layers keep the jnp path.
+    from repro.kernels.tiled_matmul.ops import kernel_mode
+    if (use_blockwise and kernel_mode() == "pallas"
+            and cfg.sliding_window is None):
+        from repro.kernels.flash_attention.ops import flash_attention
+        o = flash_attention(
+            q.reshape(b, s, kh * g, hd), k, v, scale=scale, causal=causal,
+            softcap=cfg.attn_logit_softcap,
+            q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv
+        ).reshape(b, s, kh, g, hd)
+    elif use_blockwise:
+        o = _attend_blockwise(
+            q, k, v, 0, scale=scale, cap=cfg.attn_logit_softcap,
+            causal=causal, window=cfg.sliding_window, is_local=is_local,
+            q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv)
+    else:
+        # decode masking: hide cache slots beyond the current position
+        window = cfg.sliding_window if memory is None else None
+        o = _attend_dense(q, k, v, q_pos, k_pos, scale=scale,
+                          cap=cfg.attn_logit_softcap,
+                          causal=causal and memory is None,
+                          window=window, is_local=is_local)
+
+    o = o.reshape(b, s, cfg.q_dim)
+    y = apply_linear(params["wo"], o, mode=cfg.quant_proj)
+    return y, new_cache

@@ -1,0 +1,45 @@
+"""Dense feed-forward blocks (GLU family) — quantizable projections."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized_linear import apply_linear, init_linear
+from repro.launch.sharding import shard
+from repro.models.config import ModelConfig
+
+Params = dict
+
+_ACT = {
+    "swiglu": jax.nn.silu,
+    "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu_mlp": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+def init_ffn(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None
+             ) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    p: Params = {}
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        p["gate"] = init_linear(kg, cfg.d_model, d_ff)
+        p["up"] = init_linear(ku, cfg.d_model, d_ff)
+    else:
+        p["up"] = init_linear(ku, cfg.d_model, d_ff)
+    p["down"] = init_linear(
+        kd, d_ff, cfg.d_model,
+        scale=(d_ff ** -0.5) / max(cfg.n_layers, 1) ** 0.5)
+    return p
+
+
+def apply_ffn(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _ACT[cfg.ffn_type]
+    mode = cfg.quant_proj
+    if "gate" in params:
+        h = act(apply_linear(params["gate"], x, mode=mode)) \
+            * apply_linear(params["up"], x, mode=mode)
+    else:
+        h = act(apply_linear(params["up"], x, mode=mode))
+    h = shard(h, "batch", None, "mlp")
+    return apply_linear(params["down"], h, mode=mode)

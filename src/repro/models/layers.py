@@ -1,0 +1,118 @@
+"""Shared building blocks: norms, embeddings, positions, softcap."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dim: int | None = None) -> Params:
+    dim = dim or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"w": jnp.ones((dim,), jnp.float32),
+                "b": jnp.zeros((dim,), jnp.float32)}
+    w0 = 0.0 if cfg.rms_unit_offset else 1.0
+    return {"w": jnp.full((dim,), w0, jnp.float32)}
+
+
+def apply_norm(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        return (y * params["w"] + params["b"]).astype(dtype)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True)
+                        + cfg.norm_eps)
+    w = params["w"] + 1.0 if cfg.rms_unit_offset else params["w"]
+    return (xf * rms * w).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Softcap (gemma2): cap * tanh(x / cap)
+# --------------------------------------------------------------------------
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Token embedding + LM head
+# --------------------------------------------------------------------------
+def init_embedding(key: jax.Array, cfg: ModelConfig) -> Params:
+    table = jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                              jnp.float32) * (cfg.d_model ** -0.5)
+    return {"table": table}
+
+
+def embed_tokens(params: Params, tokens: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["table"], tokens, axis=0)
+    if cfg.embed_scale is not None:
+        x = x * cfg.embed_scale
+    return x.astype(cfg.activation_dtype)
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig,
+            head_params: Params | None = None) -> jax.Array:
+    """Logits; tied (embed table) or separate head; gemma2 final softcap."""
+    from repro.launch.sharding import shard_logits
+    table = (head_params["w"] if head_params is not None
+             else params["table"])
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    logits = shard_logits(logits)
+    if cfg.logits_multiplier != 1.0:
+        logits = logits / cfg.logits_multiplier
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding: full / partial (chatglm 2d-RoPE = rotate half
+# of head_dim, pairwise-interleaved) — applied to (..., seq, heads, head_dim)
+# --------------------------------------------------------------------------
+def _rope_angles(positions: jax.Array, rot_dim: int,
+                 theta: float) -> tuple[jax.Array, jax.Array]:
+    freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                            / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freq   # (..., S, rot/2)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig
+               ) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    if cfg.rope_style == "none" or cfg.pos_embedding != "rope":
+        return x
+    d = x.shape[-1]
+    rot_dim = int(d * cfg.rope_fraction) if cfg.rope_style == "partial" else d
+    rot_dim -= rot_dim % 2
+    sin, cos = _rope_angles(positions, rot_dim, cfg.rope_theta)
+    sin = sin[..., None, :]            # broadcast over heads: (B,S,1,rot/2)
+    cos = cos[..., None, :]
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate(
+        [rotated.astype(x.dtype), x[..., rot_dim:]], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Sinusoidal absolute positions (seamless-m4t enc-dec)
+# --------------------------------------------------------------------------
+def sinusoidal_positions(positions: jax.Array, dim: int) -> jax.Array:
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,220 @@
+"""Mixture-of-Experts FFN: top-k routing, per-sequence capacity dispatch.
+
+Dispatch is scatter/gather based (no one-hot dispatch tensors — those are
+O(T²k) at our token counts) and keeps the batch dimension leading so the
+whole block shards cleanly under GSPMD: tokens stay on their data shard,
+expert weights are replicated over `data` and tensor-parallel over `model`
+on the expert-FFN hidden dim (``expert_mlp``) — the shard-if-divisible rule
+also covers the expert dim when it divides the mesh axis.
+
+The paper connection (DESIGN.md §4): each routed expert GEMM reuses the same
+activation buffer layout, so the per-expert batched GEMM
+``(E, C, D) × (E, D, F)`` is the update_A pattern across experts — one A
+panel contracted against many B matrices.  With ``quant_proj='w8a8'`` the
+expert GEMMs run int8 (batched per expert).
+
+Capacity is per sequence: C = ceil(S·k/E · capacity_factor); overflow tokens
+are dropped (standard Switch/GShard semantics), underflow slots are zero.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.quantized_linear import init_linear
+from repro.launch.sharding import active_mesh, shard
+from repro.models.config import ModelConfig
+from repro.models.ffn import _ACT, apply_ffn, init_ffn
+
+Params = dict
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Params:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+
+    def expert_stack(k_, shape, fan_in):
+        return (jax.random.truncated_normal(k_, -2.0, 2.0, shape, jnp.float32)
+                * fan_in ** -0.5)
+
+    p: Params = {
+        "router": init_linear(kr, d, e),
+        "experts": {
+            "gate": expert_stack(kg, (e, d, f), d),
+            "up": expert_stack(ku, (e, d, f), d),
+            "down": expert_stack(kd, (e, f, d), f) / max(cfg.n_layers, 1) ** 0.5,
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(ks, cfg,
+                               d_ff=cfg.n_shared_experts * cfg.d_ff_expert)
+    return p
+
+
+def _capacity(cfg: ModelConfig, s: int) -> int:
+    c = math.ceil(s * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    c = max(8, -(-c // 8) * 8)             # round up to 8 for TPU lanes
+    # a sequence of S tokens contributes at most S slots per expert —
+    # without this bound a decode step (S=1) would pad 8 slots/expert,
+    # a 128x compute overhead at 128 experts
+    return min(c, s)
+
+
+def _dispatch_compute(x, gates, idx, w, cfg: ModelConfig, *,
+                      ep_axis: str | None = None):
+    """Sort-based capacity dispatch + expert GEMMs + combine.
+
+    Pure function of LOCAL (or global, on one device) operands: every
+    gather/scatter indexes within the leading batch dim, so running it
+    under shard_map over the DP axes keeps dispatch entirely on-shard.
+    x (B,S,D); gates/idx (B,S,k); w = expert weights {'gate','up','down'}.
+
+    ``ep_axis``: expert-parallel manual mesh axis — ``w`` leaves arrive
+    sliced to this shard's experts (E_local = E/|axis|); tokens routed to
+    remote experts are masked out locally and the partial outputs are
+    psum'd, so the only cross-chip traffic for the whole MoE layer is one
+    all-reduce of the (B,S,D) output.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(cfg, s)
+    act = _ACT[cfg.ffn_type]
+
+    def _leaf(name):
+        ww = w.get(name, w.get(name + "_q"))
+        return ww.values if hasattr(ww, "values") else ww
+
+    e_local = _leaf("gate").shape[0]
+    if ep_axis is not None:
+        e_off = jax.lax.axis_index(ep_axis) * e_local
+    else:
+        e_off = 0
+        e_local = e
+
+    tk = s * k
+    flat_e = idx.reshape(b, tk)                                    # (B,Tk)
+    flat_t = jnp.repeat(jnp.arange(s), k)                          # (Tk,)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)               # (B,Tk)
+    st = flat_t[order]                                             # (B,Tk)
+    b_ix = jnp.arange(b)[:, None]
+
+    counts = jnp.zeros((b, e), jnp.int32).at[b_ix, flat_e].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts                  # (B,E)
+    pos = jnp.arange(tk)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = pos < c
+    se_loc = se - e_off                       # local expert id; OOB = remote
+    oob = (se_loc < 0) | (se_loc >= e_local)
+    keep = keep & ~oob
+    pos_c = jnp.where(keep, pos, c)                                # c = drop
+    se_c = jnp.clip(se_loc, 0, e_local - 1)
+
+    xs = jnp.take_along_axis(x, st[..., None], axis=1)             # (B,Tk,D)
+    xbuf = jnp.zeros((b, e_local, c, d), x.dtype).at[b_ix, se_c, pos_c] \
+        .set(jnp.where(keep[..., None], xs, 0), mode="drop")
+
+    # ---- expert GEMMs (the update_A pattern across experts) ---------------
+    def wv(name):
+        ww = w.get(name, w.get(name + "_q"))
+        if hasattr(ww, "values"):             # quantized experts (QTensor)
+            return (ww.values.astype(x.dtype)
+                    * ww.scale.astype(x.dtype))
+        return ww.astype(x.dtype)
+
+    h = act(jnp.einsum("becd,edf->becf", xbuf, wv("gate"))) \
+        * jnp.einsum("becd,edf->becf", xbuf, wv("up"))
+    ybuf = jnp.einsum("becf,efd->becd", h, wv("down"))
+
+    # ---- combine -----------------------------------------------------------
+    yg = ybuf[b_ix, se_c, jnp.minimum(pos, c - 1)]                 # (B,Tk,D)
+    w_flat = jnp.take_along_axis(gates.reshape(b, tk), order, axis=-1)
+    yg = jnp.where(keep[..., None], yg * w_flat[..., None].astype(x.dtype),
+                   0)
+    y = jnp.zeros((b, s, d), x.dtype).at[b_ix, st].add(yg)
+    if ep_axis is not None:
+        y = jax.lax.psum(y, ep_axis)
+    return y
+
+
+def apply_moe(params: Params, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, D) → (y, aux) with load-balance loss in aux.
+
+    §Perf note: under pjit alone, the batch-indexed gathers/scatters of the
+    dispatch were not recognized as batch-aligned by GSPMD and each one
+    all-gathered the (B,E,C,D) buffers — TB-scale collectives per step.
+    The dispatch therefore runs inside ``jax.shard_map`` manual over the DP
+    axes (tokens never leave their shard) with the `model` axis left auto
+    so the expert GEMMs keep their tensor-parallel sharding.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)               # (B,S,k)
+    if cfg.router_norm_topk:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    gates = gates.astype(x.dtype)
+
+    # ---- load-balance aux (Switch eq. 4): E * Σ_e f_e · P_e ---------------
+    me = jnp.mean(probs, axis=(0, 1))                              # (E,)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)
+    fe = jnp.mean(one_hot_top1, axis=(0, 1))
+    aux = {"load_balance_loss": e * jnp.sum(me * fe)}
+
+    w = params["experts"]
+    mesh = active_mesh()
+    dp_axes = tuple(a for a in ("pod", "data")
+                    if mesh is not None and a in mesh.shape)
+    import numpy as _np
+    dp = int(_np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    use_sharded = (cfg.moe_impl in ("auto", "sharded") and mesh is not None
+                   and dp > 1 and b % dp == 0)
+    msize = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+    use_ep = use_sharded and msize > 1
+
+    spec_b = P(dp_axes, None, None)
+    if use_ep:
+        # expert parallelism: model axis manual, experts sliced E-wise,
+        # one psum of the (B,S,D) output — total MoE-layer traffic is one
+        # all-reduce instead of per-dispatch gathers.  An expert count that
+        # does not divide the axis (granite: 40 on 16) is zero-padded with
+        # dummy experts — the router never selects ids >= E, so the dummy
+        # shards simply mask out every token.
+        if e % msize != 0:
+            e_pad = -(-e // msize) * msize
+
+            def pad_e(a):
+                return jnp.pad(a, ((0, e_pad - e),) + ((0, 0),) * (a.ndim - 1))
+
+            w = jax.tree.map(pad_e, w)
+        w_specs = {k_: P("model") for k_ in w}
+        y = jax.shard_map(
+            lambda xl, gl, il, wl: _dispatch_compute(xl, gl, il, wl, cfg,
+                                                     ep_axis="model"),
+            mesh=mesh,
+            in_specs=(spec_b, spec_b, spec_b, w_specs),
+            out_specs=spec_b,
+            axis_names=set(dp_axes) | {"model"},
+            check_vma=False,
+        )(x, gates, idx, w)
+    elif use_sharded:
+        # dp-manual: dispatch local per data shard (single-axis meshes)
+        y = jax.shard_map(
+            lambda xl, gl, il, wl: _dispatch_compute(xl, gl, il, wl, cfg),
+            mesh=mesh,
+            in_specs=(spec_b, spec_b, spec_b, P()),
+            out_specs=spec_b,
+            axis_names=set(dp_axes),
+            check_vma=False,
+        )(x, gates, idx, w)
+    else:
+        y = _dispatch_compute(x, gates, idx, w, cfg)
+
+    if "shared" in params:
+        y = y + apply_ffn(params["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,205 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + O(1) decode.
+
+Projections are *split* (in_z / in_x / in_B / in_C / in_dt instead of one
+fused in_proj) so each is a clean dense GEMM: (a) tensor-parallel sharding
+is exact (d_inner on `model`, B/C/dt replicated) and (b) each projection is
+a QuantizedLinear, so the paper's int8 technique applies to the SSM block's
+GEMMs even though the selective scan itself is not a matmul (see DESIGN.md
+§Arch-applicability).  The depthwise causal conv (k=4) is implemented as k
+shifted adds — feature-local, shards trivially.
+
+The chunked SSD algorithm follows the Mamba2 paper (arXiv:2405.21060 §6):
+intra-chunk quadratic attention-like term + inter-chunk recurrence on the
+(H, P, N) state, with ngroups=1 (B/C shared across heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized_linear import apply_linear, init_linear
+from repro.launch.sharding import shard
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    k = jax.random.split(key, 8)
+    conv = cfg.ssm_conv
+    p: Params = {
+        "in_z": init_linear(k[0], d, di),
+        "in_x": init_linear(k[1], d, di),
+        "in_B": init_linear(k[2], d, n),
+        "in_C": init_linear(k[3], d, n),
+        "in_dt": init_linear(k[4], d, h),
+        "conv_x": {"w": jnp.zeros((conv, di), jnp.float32)
+                   .at[-1].set(1.0)},          # identity-ish init
+        "conv_B": {"w": jnp.zeros((conv, n), jnp.float32).at[-1].set(1.0)},
+        "conv_C": {"w": jnp.zeros((conv, n), jnp.float32).at[-1].set(1.0)},
+        "ssm": {
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+            "D": jnp.ones((h,), jnp.float32),
+            "dt_bias": jnp.log(jnp.expm1(
+                jnp.exp(jax.random.uniform(k[5], (h,), jnp.float32)
+                        * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))),
+        },
+        "norm": {"w": jnp.ones((di,), jnp.float32)},
+        "out_proj": init_linear(k[6], di, d,
+                                scale=(di ** -0.5)
+                                / max(cfg.n_layers, 1) ** 0.5),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv as k shifted adds.  x (B,L,C); w (k,C).
+
+    With ``state`` (B, k-1, C) — decode mode: x is (B,1,C), returns
+    (y (B,1,C), new_state).
+    """
+    k = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)        # (B,k,C)
+        y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                       w)[:, None, :]
+        return y.astype(x.dtype), window[:, 1:, :]
+    pads = [jnp.pad(x, ((0, 0), (k - 1 - i, 0), (0, 0)))[:, :x.shape[1], :]
+            for i in range(k)]
+    y = sum(pads[i].astype(jnp.float32) * w[i] for i in range(k))
+    return y.astype(x.dtype), None
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., cs) → (..., cs, cs): sum over (j, i], -inf above diagonal."""
+    cs = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    ii = jnp.arange(cs)
+    return jnp.where(ii[:, None] >= ii[None, :], diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a_dt: jax.Array, b_mat: jax.Array,
+                c_mat: jax.Array, chunk: int,
+                init_state: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x     (B, L, H, P)   — dt-premultiplied inputs
+    a_dt  (B, L, H)      — A·dt (negative)
+    b_mat (B, L, N), c_mat (B, L, N)  — shared across heads (ngroups=1)
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc, cs = l // chunk, chunk
+
+    xc = x.reshape(bsz, nc, cs, h, p)
+    ac = a_dt.reshape(bsz, nc, cs, h).transpose(0, 3, 1, 2)   # (B,H,nc,cs)
+    bc = b_mat.reshape(bsz, nc, cs, n)
+    cc = c_mat.reshape(bsz, nc, cs, n)
+
+    xc32 = shard(xc.astype(jnp.float32),
+                 "batch", None, None, "ssm_heads", None)
+    ac = shard(ac, "batch", "ssm_heads", None, None)
+    bc32 = bc.astype(jnp.float32)
+    cc32 = cc.astype(jnp.float32)
+
+    # intra-chunk ("diagonal block") term
+    ldec = jnp.exp(_segsum(ac))                               # (B,H,nc,cs,cs)
+    ldec = shard(ldec, "batch", "ssm_heads", None, None, None)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cc32, bc32, ldec, xc32)
+
+    # per-chunk states + inter-chunk recurrence
+    a_cum = jnp.cumsum(ac, axis=-1)                           # (B,H,nc,cs)
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", bc32, decay_states, xc32)
+    states = shard(states, "batch", None, "ssm_heads", None, None)
+    chunk_decay = jnp.exp(a_cum[..., -1])                     # (B,H,nc)
+
+    h0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((bsz, h, p, n), jnp.float32))
+
+    def step(h_prev, inp):
+        st, dec = inp                                         # (B,H,P,N),(B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                # (nc,B,H,P,N)
+    decay_t = chunk_decay.transpose(2, 0, 1)                  # (nc,B,H)
+    final_state, prev_states = jax.lax.scan(step, h0, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 2, 0, 3, 4)        # (B,H,nc,P,N)
+
+    state_decay_out = jnp.exp(a_cum)                          # (B,H,nc,cs)
+    y_off = jnp.einsum("bcln,bhcpn,bhcl->bclhp",
+                       cc32, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p).astype(x.dtype)
+    return y, final_state
+
+
+def apply_mamba2(params: Params, x: jax.Array, cfg: ModelConfig, *,
+                 state: dict | None = None):
+    """Mamba2 block.  Training/prefill: state=None.  Decode: state is
+    {"h": (B,H,P,N) f32, "conv_x": (B,k-1,di), "conv_B": …, "conv_C": …};
+    x is (B, 1, D).  Returns (y, new_state_or_None).
+    """
+    bsz, l, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    p = cfg.ssm_head_dim
+    mode = cfg.quant_proj
+
+    z = apply_linear(params["in_z"], x, mode=mode)
+    xs = apply_linear(params["in_x"], x, mode=mode)
+    bm = apply_linear(params["in_B"], x, mode=mode)
+    cm = apply_linear(params["in_C"], x, mode=mode)
+    dt = apply_linear(params["in_dt"], x, mode=mode)
+
+    decode = state is not None
+    xs, conv_x = _causal_conv(xs, params["conv_x"]["w"],
+                              state["conv_x"] if decode else None)
+    bm, conv_b = _causal_conv(bm, params["conv_B"]["w"],
+                              state["conv_B"] if decode else None)
+    cm, conv_c = _causal_conv(cm, params["conv_C"]["w"],
+                              state["conv_C"] if decode else None)
+    xs, bm, cm = jax.nn.silu(xs), jax.nn.silu(bm), jax.nn.silu(cm)
+    xs = shard(xs, "batch", None, "ssm_inner")
+
+    a = -jnp.exp(params["ssm"]["A_log"])                       # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["ssm"]["dt_bias"])           # (B,L,H)
+    x_hd = xs.reshape(bsz, l, h, p)
+    x_dt = x_hd * dt[..., None].astype(x_hd.dtype)
+
+    if not decode:
+        y, final = ssd_chunked(x_dt, dt * a, bm, cm,
+                               min(cfg.ssm_chunk, l))
+        new_state = {"h": final, "conv_x": None, "conv_B": None,
+                     "conv_C": None}
+    else:
+        h_prev = state["h"]                                    # (B,H,P,N)
+        da = jnp.exp(dt[:, 0, :] * a)                          # (B,H)
+        xb = jnp.einsum("bhp,bn->bhpn", x_dt[:, 0].astype(jnp.float32),
+                        bm[:, 0].astype(jnp.float32))
+        h_new = h_prev * da[..., None, None] + xb
+        y = jnp.einsum("bhpn,bn->bhp", h_new,
+                       cm[:, 0].astype(jnp.float32))[:, None]
+        y = y.astype(x_hd.dtype).reshape(bsz, 1, h, p)
+        new_state = {"h": h_new, "conv_x": conv_x, "conv_B": conv_b,
+                     "conv_C": conv_c}
+
+    y = y + x_hd * params["ssm"]["D"][None, None, :, None].astype(x_hd.dtype)
+    y = y.reshape(bsz, l, di)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(gf * gf, axis=-1, keepdims=True)
+                        + cfg.norm_eps)
+    g = (gf * rms * params["norm"]["w"]).astype(x.dtype)
+
+    y = apply_linear(params["out_proj"], g, mode=mode)
+    return y, (new_state if decode else None)

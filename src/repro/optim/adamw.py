@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay + global-norm clipping (pure JAX)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamWState(mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        count = state.count + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = global_norm(grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * (g * g),
+                          state.nu, grads)
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** c)
+        nu_hat_scale = 1.0 / (1 - b2 ** c)
+        lr = self._lr(count)
+
+        def upd(p, m, v):
+            step = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale)
+                                         + self.eps)
+            step = step + self.weight_decay * p
+            return (p - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(mu=mu, nu=nu, count=count), gnorm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

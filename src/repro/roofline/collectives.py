@@ -1,0 +1,89 @@
+"""Collective-bytes accounting from post-SPMD HLO text.
+
+``cost_analysis`` has no collective term, so we parse the partitioned HLO
+(one device's program) and sum bytes moved per chip per op, with standard
+ring-algorithm factors:
+
+  all-reduce          2 · S_out · (n-1)/n      (reduce-scatter + all-gather)
+  all-gather          S_out · (n-1)/n          (S_out = gathered buffer)
+  reduce-scatter      S_in  · (n-1)/n
+  all-to-all          S · (n-1)/n
+  collective-permute  S                        (point-to-point)
+
+n = replica-group size parsed from the op's ``replica_groups``.  Shapes in
+the partitioned module are per-device, so the sums are per-chip bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,\s]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    bytes_by_op: dict = {}
+    count_by_op: dict = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        # group size n
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            first = g.group(1).strip()
+            n = len([t for t in first.split(",") if t.strip() != ""]) or 1
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        frac = (n - 1) / n if n > 1 else 0.0
+        if op == "all-reduce":
+            moved = 2 * size * frac
+        elif op in ("all-gather", "all-to-all"):
+            moved = size * frac
+        elif op == "reduce-scatter":
+            moved = size * frac * n   # S_in = S_out * n (per-device input)
+        else:  # collective-permute
+            moved = size
+        bytes_by_op[op] = bytes_by_op.get(op, 0.0) + moved
+        count_by_op[op] = count_by_op.get(op, 0) + 1
+    return CollectiveStats(bytes_by_op, count_by_op)

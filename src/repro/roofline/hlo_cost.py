@@ -1,0 +1,296 @@
+"""Trip-count-aware cost extraction from post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so any model
+that scans over layers (every production stack) under-reports FLOPs /
+bytes / collectives by ~n_layers.  (Verified on this JAX build: a length-10
+scan of a 256³ matmul reports exactly 1/10 the unrolled flops.)
+
+This module re-derives the three roofline inputs from the partitioned HLO
+text with loop awareness:
+
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` —
+    the authoritative trip count XLA itself derived from the scan;
+  * a call-graph walk (while bodies/conditions, fusion/call targets)
+    assigns each computation a multiplier = product of enclosing trips;
+  * FLOPs: every ``dot`` contributes 2 · |result| · K, K = product of the
+    lhs contracting-dim sizes (operand shapes resolved via a per-computation
+    SSA symbol table).  Elementwise FLOPs are ignored — dots dominate
+    transformer cost; tests report the delta vs cost_analysis on loop-free
+    programs;
+  * bytes: results + operands of fusion/dot/copy/gather/scatter/dus ops —
+    a fusion-level "bytes touched" proxy for HBM traffic;
+  * collective bytes: ring-algorithm byte counts (see collectives.py) ×
+    multiplier.
+
+All shapes in the partitioned module are per-device, so totals are
+per-device values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline.collectives import _DTYPE_BYTES, _SHAPE_RE
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\-\.]+)\s*\(.*\{\s*$")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\-\.]+)\s*=\s*((?:\([^=]*?\))|(?:\S+))\s+([\w\-]+)")
+_WHILE_RE = re.compile(
+    r"condition=%?([\w\-\.]+).*?body=%?([\w\-\.]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:?\s*\{"?n"?\s*:\s*"?(\d+)')
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\-\.]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FIRST_OPERAND_RE = re.compile(r"\(\s*%([\w\-\.]+)")
+
+# Ops whose operands/results genuinely cross HBM on a TPU (pointwise chains
+# fuse into their producers/consumers and are intentionally NOT counted —
+# the CPU backend leaves them unfused, which otherwise inflates the memory
+# term ~10x vs what a TPU executes; see EXPERIMENTS.md methodology).
+_BYTES_OPS = {"dot", "gather", "scatter", "dynamic-update-slice",
+              "dynamic-slice", "reduce", "reduce-window", "sort", "rng",
+              "convolution", "concatenate", "pad"}
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str):
+    elems, nbytes = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            s = line.strip()
+            if s == "}":
+                cur = None
+            elif s:
+                comps[cur].append(s)
+    return comps
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_touched: float
+    coll_bytes: float
+    coll_detail: dict
+    n_while: int
+    trip_counts: dict
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = _split_computations(hlo)
+    entry_m = re.search(r"^ENTRY\s+%([\w\-\.]+)", hlo, re.M)
+    entry = entry_m.group(1) if entry_m else (next(iter(comps), None))
+
+    # symbol tables (SSA name -> shape string / full line) per computation
+    symtab: dict[str, dict[str, str]] = {}
+    symlines: dict[str, dict[str, str]] = {}
+    for name, lines in comps.items():
+        tab = {}
+        ltab = {}
+        for ln in lines:
+            d = _DEF_RE.match(ln)
+            if d:
+                tab[d.group(1)] = d.group(2)
+                ltab[d.group(1)] = ln
+        symtab[name] = tab
+        symlines[name] = ltab
+
+    # call graph with loop multipliers; fusion bodies marked so their
+    # internal elementwise ops are not double-counted for bytes (the fusion
+    # callsite already accounts for the traffic)
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    trip_counts: dict[str, int] = {}
+    fusion_bodies: set = set()
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln:
+                wm = _WHILE_RE.search(ln)
+                tm = _TRIP_RE.search(ln)
+                trips = int(tm.group(1)) if tm else 1
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trip_counts[body] = trips
+                    edges[name].append((body, trips))
+                    edges[name].append((cond, trips + 1))
+                continue
+            cm = _CALL_RE.search(ln)
+            if cm and cm.group(1) in comps:
+                edges[name].append((cm.group(1), 1))
+                if " fusion(" in ln or "to_apply=" in ln or "reduce" in ln:
+                    fusion_bodies.add(cm.group(1))
+
+    mult: dict[str, float] = {}
+
+    def assign(name: str, m: float, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        if mult.get(name, 0.0) >= m:
+            return
+        mult[name] = m
+        for child, k in edges.get(name, []):
+            assign(child, m * k, depth + 1)
+
+    if entry:
+        assign(entry, 1.0)
+    for name in comps:
+        mult.setdefault(name, 0.0)   # unreachable => not executed
+
+    flops = 0.0
+    bytes_touched = 0.0
+    coll: dict[str, float] = {}
+    coll_count: dict[str, int] = {}
+
+    # CPU-backend correction: XLA:CPU computes bf16 dots in f32 and places
+    # the TP partial-sum all-reduce on the f32 value before the downcast;
+    # a TPU reduces the bf16 value.  Collectives whose operand (directly or
+    # through one convert/bitcast/fusion wrapper) is a dot with bf16 inputs
+    # are therefore counted at bf16 width.  (EXPERIMENTS.md methodology.)
+    def _bf16_dot_reduced(opnd: str, tab: dict, ltab: dict,
+                          depth=0) -> bool:
+        ln = ltab.get(opnd)
+        if ln is None or depth > 2:
+            return False
+        d = _DEF_RE.match(ln)
+        if not d:
+            return False
+        op = d.group(3)
+        refs = re.findall(r"%([\w\-\.]+)", ln.split("(", 1)[1][:200]) \
+            if "(" in ln else []
+        if op == "dot":
+            # dot operands may themselves be bf16→f32 converts (CPU
+            # legalization): look through one layout/convert level
+            def src_bf16(r, d2=0):
+                if "bf16[" in tab.get(r, ""):
+                    return True
+                if d2 >= 2:
+                    return False
+                ln2 = ltab.get(r)
+                if ln2 is None:
+                    return False
+                refs2 = re.findall(r"%([\w\-\.]+)",
+                                   ln2.split("(", 1)[1][:200]) \
+                    if "(" in ln2 else []
+                return any(src_bf16(r2, d2 + 1) for r2 in refs2[:2])
+            return any(src_bf16(r) for r in refs[:2])
+        if op in ("bitcast", "convert", "copy", "fusion", "transpose",
+                  "reshape", "bitcast-convert"):
+            return any(_bf16_dot_reduced(r, tab, ltab, depth + 1)
+                       for r in refs[:2])
+        return False
+
+    for name, lines in comps.items():
+        m = mult[name]
+        if m == 0.0:
+            continue
+        tab = symtab[name]
+        for ln in lines:
+            d = _DEF_RE.match(ln)
+            if not d:
+                continue
+            res_shape, op = d.group(2), d.group(3)
+
+            if op == "dot":
+                res_elems, _ = _shape_elems_bytes(res_shape)
+                k = 1
+                cdm = _CONTRACT_RE.search(ln)
+                opm = _FIRST_OPERAND_RE.search(ln[ln.index("dot("):])
+                if cdm and opm:
+                    lhs_shape = tab.get(opm.group(1))
+                    dims = _shape_dims(lhs_shape) if lhs_shape else None
+                    if dims is not None:
+                        for c in (int(x) for x in cdm.group(1).split(",")
+                                  if x.strip()):
+                            if c < len(dims):
+                                k *= dims[c]
+                flops += m * 2.0 * res_elems * k
+
+            is_coll = None
+            for cop in _COLL_OPS:
+                if op.startswith(cop):
+                    is_coll = cop
+                    break
+            if is_coll:
+                _, size = _shape_elems_bytes(res_shape)
+                if "f32[" in res_shape:
+                    refs = [r for r in re.findall(
+                        r"%([\w\-\.]+)", ln.split("(", 1)[1][:200])
+                        if r in symlines[name]][:2]
+                    if refs and all(_bf16_dot_reduced(r, tab, symlines[name])
+                                    for r in refs):
+                        size = size // 2          # bf16-equivalent width
+                n = 1
+                g = re.search(r"replica_groups=\{\{([^}]*)\}", ln)
+                if g:
+                    n = len([t for t in g.group(1).split(",")
+                             if t.strip()]) or 1
+                else:
+                    g2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", ln)
+                    if g2:
+                        n = int(g2.group(2))
+                frac = (n - 1) / n if n > 1 else 0.0
+                if is_coll == "all-reduce":
+                    moved = 2 * size * frac
+                elif is_coll == "reduce-scatter":
+                    moved = size * frac * n
+                elif is_coll == "collective-permute":
+                    moved = size
+                else:
+                    moved = size * frac
+                coll[is_coll] = coll.get(is_coll, 0.0) + m * moved
+                coll_count[is_coll] = coll_count.get(is_coll, 0) + 1
+
+            if (op in _BYTES_OPS or op == "dot") \
+                    and name not in fusion_bodies:
+                if op == "dynamic-update-slice":
+                    # result aliases the (possibly huge) operand; only the
+                    # written slice moves: read + write of the update
+                    refs = re.findall(r"%([\w\-\.]+)",
+                                      ln.split("(", 1)[1][:400])
+                    upd = refs[1] if len(refs) > 1 else None
+                    _, ub = _shape_elems_bytes(tab.get(upd, ""))
+                    bytes_touched += m * 2 * ub
+                    continue
+                if op == "dynamic-slice":
+                    _, rb = _shape_elems_bytes(res_shape)
+                    bytes_touched += m * 2 * rb
+                    continue
+                _, rb = _shape_elems_bytes(res_shape)
+                ob = 0
+                seg = ln.split("(", 1)
+                if len(seg) == 2:
+                    for ref in re.findall(r"%([\w\-\.]+)", seg[1][:400]):
+                        if ref in tab:
+                            _, b = _shape_elems_bytes(tab[ref])
+                            ob += b
+                bytes_touched += m * (rb + ob)
+
+    return HloCost(flops=flops, bytes_touched=bytes_touched,
+                   coll_bytes=sum(coll.values()),
+                   coll_detail={"bytes": coll, "count": coll_count},
+                   n_while=len(trip_counts), trip_counts=trip_counts)

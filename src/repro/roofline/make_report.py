@@ -1,0 +1,22 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+JSON records (run after any dry-run refresh):
+
+    PYTHONPATH=src python -m repro.roofline.make_report > experiments/tables.md
+"""
+from __future__ import annotations
+
+from repro.roofline.table import load_records, notes_markdown, to_markdown
+
+
+def main():
+    recs = load_records()
+    print("### Single-pod (16×16 = 256 chips)\n")
+    print(to_markdown(recs, "16x16"))
+    print("\n### Multi-pod (2×16×16 = 512 chips)\n")
+    print(to_markdown(recs, "2x16x16"))
+    print("\n### Per-cell bottleneck notes (single-pod)\n")
+    print(notes_markdown(recs, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Analytic MODEL_FLOPS: 6·N·D (train) / 2·N_active·D (inference) + attn."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def count_params(params, *, exclude_embed: bool = True) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if exclude_embed and ("embed" in names or "lm_head" in names):
+            continue
+        total += int(np.prod(leaf.shape))
+    return total
+
+
+def model_flops(cfg: ModelConfig, params_shape, *, kind: str,
+                tokens: int, kv_len: int = 0, batch: int = 0) -> float:
+    """Global useful FLOPs for one step.
+
+    kind=train: 6·N_active·tokens (fwd+bwd) + attention score FLOPs.
+    kind=prefill: 2·N_active·tokens + attention.
+    kind=decode: 2·N_active·tokens + 2·2·kv_len·H·hd·batch per layer (QK^T
+    and P·V against the cache).
+    """
+    n_total = count_params(params_shape, exclude_embed=True)
+    if cfg.is_moe:
+        expert_p = (cfg.n_layers * cfg.n_experts * 3
+                    * cfg.d_model * cfg.d_ff_expert)
+        dense_p = n_total - expert_p
+        n_active = dense_p + expert_p * cfg.top_k / cfg.n_experts
+    else:
+        n_active = n_total
+
+    mult = 6 if kind == "train" else 2
+    flops = mult * n_active * tokens
+
+    # attention scores+values (not in N·D accounting)
+    if cfg.has_attention:
+        h, hd = cfg.n_heads, cfg.head_dim
+        n_attn_layers = (cfg.n_layers if cfg.family != "hybrid"
+                         else cfg.n_layers // max(cfg.shared_attn_every, 1))
+        if kind in ("train", "prefill"):
+            s = tokens // max(batch, 1)
+            causal_frac = 0.5
+            per_layer = 2 * 2 * batch * s * s * h * hd * causal_frac
+            flops += (3 if kind == "train" else 1) * n_attn_layers * per_layer
+        else:
+            per_layer = 2 * 2 * batch * kv_len * h * hd
+            flops += n_attn_layers * per_layer
+    return float(flops)

@@ -1,0 +1,99 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e constants)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.tiling import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per-device (post-SPMD module)
+    hlo_bytes: float            # per-device bytes accessed
+    coll_bytes: float           # per-device collective bytes
+    model_flops: float          # analytic 6·N·D (train) / 2·N·D (serve), global
+    peak_mem_bytes: float       # per-device peak from memory_analysis
+    coll_detail: dict | None = None
+    xla_cost_flops_raw: float = 0.0   # cost_analysis() (loop bodies ×1)
+    n_while: int = 0
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_BF16_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips × HLO_FLOPs): 1.0 = no waste; <1 = remat/
+        redundancy/replication overhead."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound; with perfect overlap it's the max term."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute time / bound step time ∈ (0, 1]."""
+        useful_s = (self.model_flops / self.chips) / PEAK_BF16_FLOPS
+        return useful_s / self.step_time_s if self.step_time_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes, "model_flops": self.model_flops,
+            "peak_mem_bytes": self.peak_mem_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "xla_cost_flops_raw": self.xla_cost_flops_raw,
+            "n_while": self.n_while,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def build_roofline(*, arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: dict, memstats, hlo_text: str,
+                   model_flops: float) -> Roofline:
+    """Roofline inputs come from the trip-count-aware HLO parser
+    (roofline/hlo_cost.py) — ``cost_analysis`` counts while bodies once and
+    would under-report a scanned-layer stack by ~n_layers.  The raw
+    cost_analysis flops are kept alongside for reference."""
+    hc = analyze_hlo(hlo_text)
+    peak = (memstats.temp_size_in_bytes + memstats.argument_size_in_bytes
+            + memstats.output_size_in_bytes - memstats.alias_size_in_bytes)
+    r = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hc.flops,
+        hlo_bytes=hc.bytes_touched,
+        coll_bytes=hc.coll_bytes,
+        model_flops=model_flops,
+        peak_mem_bytes=float(peak),
+        coll_detail=hc.coll_detail,
+    )
+    r.xla_cost_flops_raw = float(cost.get("flops", 0.0))
+    r.n_while = hc.n_while
+    return r

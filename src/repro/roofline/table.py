@@ -1,0 +1,77 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(directory: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def improvement_note(rec: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    bound = rec["bound"]
+    shape = rec["shape"]
+    if bound == "collective":
+        if rec["shape"].startswith("train"):
+            return ("shrink TP collectives: bf16 boundary reductions, "
+                    "comm/compute overlap, or trade TP for more DP/FSDP")
+        return "shard KV reads wider / overlap decode collectives"
+    if bound == "memory":
+        if shape.startswith("decode") or shape.startswith("long"):
+            return ("decode is weight/KV-streaming bound: int4 weights, "
+                    "KV-cache quantization, or larger decode batch")
+        return ("cut activation traffic: larger fusion blocks, bf16 "
+                "boundaries, fewer materialized intermediates")
+    return "near compute roof: increase arithmetic intensity per pass"
+
+
+def to_markdown(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        "| arch | shape | prof | compute | memory | collective | bound | "
+        "MODEL/HLO | roofline frac | peak mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('profile','?')} | "
+            f"{_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} | "
+            f"{_fmt_s(r['collective_s'])} | **{r['bound']}** | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['peak_mem_bytes'] / 2**30:.1f}GiB |")
+    return "\n".join(lines)
+
+
+def notes_markdown(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = []
+    for r in rows:
+        lines.append(f"- **{r['arch']} × {r['shape']}** ({r['bound']}-bound,"
+                     f" frac {r['roofline_fraction']:.3f}): "
+                     f"{improvement_note(r)}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(to_markdown(recs, "16x16"))
+    print()
+    print(to_markdown(recs, "2x16x16"))

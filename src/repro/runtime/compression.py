@@ -1,0 +1,68 @@
+"""int8 gradient compression with error feedback.
+
+The paper's insight at level 2 (DESIGN.md §2): halve-or-quarter the bytes a
+bandwidth-limited interconnect must move by quantizing to int8 with a
+shared scale.  Cross-pod data-parallel all-reduce is the distributed
+analogue of the paper's DDR bus: gradients are quantized per-leaf
+(per-tensor symmetric absmax — the paper's scheme), summed in int-space by
+the collective, and dequantized; the quantization residual is carried to
+the next step (error feedback, Seide et al. 2014) so convergence is
+preserved.
+
+Inside a jit graph the quantize→psum→dequant pattern lets XLA move 1/4 the
+bytes on the `pod` axis; under GSPMD (no explicit psum) we expose it as a
+a pre-optimizer gradient transform whose int8 round-trip models the wire
+format, with the residual kept in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import qmax_for_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressor:
+    bits: int = 8
+    stochastic: bool = True
+
+    def init_residual(self, params) -> Any:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+    def compress_decompress(self, grads, residual, key: jax.Array):
+        """Returns (wire_grads, new_residual).
+
+        wire_grads = dequant(quant(grads + residual)); the difference is the
+        new residual.  This is exactly what crosses the pod interconnect.
+        """
+        qmax = qmax_for_bits(self.bits)
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        res_leaves = jax.tree_util.tree_leaves(residual)
+        keys = jax.random.split(key, len(leaves))
+        out, new_res = [], []
+        for g, r, k in zip(leaves, res_leaves, keys):
+            g32 = g.astype(jnp.float32) + r
+            absmax = jnp.max(jnp.abs(g32))
+            scale = jnp.where(absmax <= 1e-30, 1.0, absmax / qmax)
+            scaled = g32 / scale
+            if self.stochastic:
+                noise = jax.random.uniform(k, scaled.shape) - 0.5
+                q = jnp.floor(scaled + 0.5 + noise)
+            else:
+                q = jnp.round(scaled)
+            q = jnp.clip(q, -qmax, qmax)
+            deq = q * scale
+            out.append(deq.astype(g.dtype))
+            new_res.append(g32 - deq)
+        return (jax.tree_util.tree_unflatten(treedef, out),
+                jax.tree_util.tree_unflatten(treedef, new_res))
+
+    def wire_bytes(self, grads) -> int:
+        """Bytes on the wire per all-reduce with compression."""
+        return sum(x.size for x in jax.tree_util.tree_leaves(grads)) \
+            + 4 * len(jax.tree_util.tree_leaves(grads))

@@ -1,0 +1,47 @@
+"""Straggler detection & mitigation hooks.
+
+In a synchronous SPMD job a slow host delays every step (the collective is
+a barrier).  Mitigations available at this layer:
+
+  * detection — per-step wall-time EWMA + outlier threshold; at scale the
+    per-host variant runs on each host's coordinator thread and reports
+    through the control plane (here: in-process monitor)
+  * mitigation — (a) flag the host for the launcher to drain/replace at the
+    next checkpoint boundary (restart-based, composes with elastic restore);
+    (b) data-pipeline work stealing: prefetch depth absorbs input-bound
+    stragglers (data/pipeline.Prefetcher)
+
+True in-step compute stealing is not possible in SPMD/XLA (fixed program);
+production systems (and this framework) handle persistent stragglers by
+checkpoint-evict-restart, which the failures.py driver implements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 2.0        # step slower than threshold × EWMA flags
+    alpha: float = 0.1
+    _ewma: float | None = None
+    flagged_steps: list = dataclasses.field(default_factory=list)
+    _t0: float | None = None
+
+    def step_start(self):
+        self._t0 = time.monotonic()
+
+    def step_end(self, step: int) -> bool:
+        dt = time.monotonic() - self._t0
+        flagged = False
+        if self._ewma is not None and dt > self.threshold * self._ewma:
+            self.flagged_steps.append((step, dt, self._ewma))
+            flagged = True
+        self._ewma = dt if self._ewma is None else (
+            self.alpha * dt + (1 - self.alpha) * self._ewma)
+        return flagged
+
+    @property
+    def mean_step_time(self) -> float | None:
+        return self._ewma

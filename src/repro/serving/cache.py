@@ -1,0 +1,80 @@
+"""Decode-state (KV / SSM) cache: construction + sharding specs.
+
+Cache layout (see models/transformer.py):
+  attention archs:  k/v (L, B, S_max, KVH, hd)
+  hybrid (zamba2):  ssm_h (L,B,H,P,N) f32, conv_* tails, plus
+                    shared_k/v (A, B, S_max, KVH, hd) for the A application
+                    sites of the parameter-shared block
+  ssm (mamba2):     ssm state + conv tails only — O(1) in context length.
+
+Sharding policy (DESIGN.md §3): batch over the DP axes; KV heads over
+`model` when divisible, otherwise the **sequence** dim of the cache goes to
+`model` (split-KV decoding — GSPMD inserts the partial-softmax
+all-reduces).  ``cache_logical_axes`` encodes that choice per array.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def n_shared_sites(cfg: ModelConfig) -> int:
+    if cfg.family != "hybrid" or not cfg.shared_attn_every:
+        return 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    cache: dict = {}
+    if cfg.family in ("ssm", "hybrid"):
+        l, h = cfg.n_layers, cfg.ssm_n_heads
+        p, n = cfg.ssm_head_dim, cfg.ssm_state
+        k = cfg.ssm_conv - 1
+        cache["ssm_h"] = jnp.zeros((l, batch, h, p, n), jnp.float32)
+        cache["conv_x"] = jnp.zeros((l, batch, k, cfg.d_inner), dtype)
+        cache["conv_B"] = jnp.zeros((l, batch, k, n), dtype)
+        cache["conv_C"] = jnp.zeros((l, batch, k, n), dtype)
+        sites = n_shared_sites(cfg)
+        if sites:
+            cache["shared_k"] = jnp.zeros(
+                (sites, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+            cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+    else:
+        cache["k"] = jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+            dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto") -> dict:
+    """Logical axes per cache array; ``kv_shard``: auto|heads|seq."""
+    axes: dict = {}
+    if cfg.family in ("ssm", "hybrid"):
+        axes["ssm_h"] = (None, "batch", "ssm_heads", None, None)
+        axes["conv_x"] = (None, "batch", None, "ssm_inner")
+        axes["conv_B"] = (None, "batch", None, None)
+        axes["conv_C"] = (None, "batch", None, None)
+        if n_shared_sites(cfg):
+            kv = _kv_axes(cfg, kv_shard)
+            axes["shared_k"] = kv
+            axes["shared_v"] = kv
+    else:
+        kv = _kv_axes(cfg, kv_shard)
+        axes["k"] = kv
+        axes["v"] = kv
+    return axes
+
+
+def _kv_axes(cfg: ModelConfig, kv_shard: str) -> tuple:
+    # (L, B, S, KVH, hd)
+    if kv_shard == "heads":
+        return (None, "batch", None, "kv_heads", None)
+    if kv_shard == "seq":
+        return (None, "batch", "kv_seq", None, None)
+    # auto: heads when they divide a 16-way model axis, else seq split
+    if cfg.n_kv_heads % 16 == 0:
+        return (None, "batch", None, "kv_heads", None)
+    return (None, "batch", "kv_seq", None, None)

@@ -1,0 +1,60 @@
+"""Serving steps: prefill and single-token decode (``serve_step``).
+
+``serve_step`` is what the decode_32k / long_500k dry-run cells lower: one
+new token against a cache of ``seq_len``.  ``prefill`` (no cache) is what
+prefill_32k lowers.  Batched request serving (the end-to-end example) loops
+``serve_step`` under ``jax.jit`` with donated cache buffers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import apply_model
+
+Params = dict
+
+
+def prefill_step(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
+                 frontend_embeds=None, encoder_frames=None):
+    """Forward pass producing logits for a prompt (no score materialization
+    beyond the blockwise chunks).  Returns (logits, aux)."""
+    logits, _, aux = apply_model(params, tokens, cfg,
+                                 frontend_embeds=frontend_embeds,
+                                 encoder_frames=encoder_frames)
+    return logits, aux
+
+
+def serve_step(params: Params, cache: dict, tokens: jax.Array,
+               pos: jax.Array, cfg: ModelConfig, *,
+               memory: jax.Array | None = None):
+    """One decode step.  tokens (B, 1); pos scalar int32 (batch-synchronous).
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    logits, new_cache, _ = apply_model(params, tokens, cfg, cache=cache,
+                                       cache_pos=pos, memory=memory)
+    return logits, new_cache
+
+
+def greedy_decode(params: Params, cache: dict, first_token: jax.Array,
+                  start_pos: int, n_steps: int, cfg: ModelConfig, *,
+                  memory=None):
+    """Greedy autoregressive loop (example/benchmark driver)."""
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def step(tok, cache, pos):
+        logits, cache = serve_step(params, cache, tok, pos, cfg,
+                                   memory=memory)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(tok.dtype)
+        return nxt, cache
+
+    toks = [first_token]
+    for i in range(n_steps):
+        nxt, cache = step(toks[-1], cache, jnp.asarray(start_pos + i,
+                                                       jnp.int32))
+        toks.append(nxt)
+    return jnp.concatenate(toks, axis=1), cache

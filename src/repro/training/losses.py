@@ -1,0 +1,30 @@
+"""Losses: next-token cross-entropy (+ z-loss) and MoE load balance."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  z_loss_coef: float = 0.0, with_accuracy: bool = False):
+    """logits (B,S,V) f32; targets (B,S) int32.  Mean over tokens.
+
+    ``with_accuracy`` is eval-only: the argmax materializes a logits-sized
+    integer buffer, which at 100k+ vocab is GiB-scale — keep it out of the
+    train step.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, targets[..., None],
+                                     axis=-1)[..., 0]
+    nll = lse - true_logit
+    loss = jnp.mean(nll)
+    metrics = {"ce": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+    if with_accuracy:
+        metrics["accuracy"] = jnp.mean(
+            (jnp.argmax(logits, -1) == targets).astype(jnp.float32))
+    if z_loss_coef:
+        zl = z_loss_coef * jnp.mean(lse ** 2)
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests run against the pure-jnp ref kernels by default (CPU); Pallas
+# kernels are exercised explicitly with mode="pallas_interpret".
+os.environ.setdefault("REPRO_KERNELS", "ref")
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (multi-device sharding tests use subprocesses).
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,129 @@
+"""Attention equivalences: blockwise vs dense, masks, GQA layouts, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import _attend_blockwise, _attend_dense
+from repro.models.config import ModelConfig
+from repro.models.ssm import ssd_chunked
+
+RNG = np.random.default_rng(7)
+
+
+def _qkv(b=2, s=64, t=64, kh=2, g=2, hd=16):
+    q = jnp.asarray(RNG.normal(size=(b, s, kh, g, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, t, kh, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, t, kh, hd)).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window,is_local", [(None, False), (16, True)])
+@pytest.mark.parametrize("cap", [None, 50.0])
+def test_blockwise_matches_dense(causal, window, is_local, cap):
+    q, k, v = _qkv()
+    pos = jnp.arange(64)
+    scale = 16 ** -0.5
+    dense = _attend_dense(q, k, v, pos, pos, scale=scale, cap=cap,
+                          causal=causal, window=window, is_local=is_local)
+    block = _attend_blockwise(q, k, v, 0, scale=scale, cap=cap,
+                              causal=causal, window=window,
+                              is_local=is_local, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_blockwise_chunk_size_invariance():
+    q, k, v = _qkv(s=64, t=64)
+    pos = jnp.arange(64)
+    outs = []
+    for qc, kc in [(8, 8), (16, 32), (64, 64), (32, 8)]:
+        outs.append(np.asarray(_attend_blockwise(
+            q, k, v, 0, scale=0.25, cap=None, causal=True, window=None,
+            is_local=False, q_chunk=qc, kv_chunk=kc)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=2e-5, rtol=1e-4)
+
+
+def test_blockwise_gradient_flows():
+    """The inner jax.checkpoint must not break or zero gradients."""
+    q, k, v = _qkv(b=1, s=32, t=32, kh=1, g=1, hd=8)
+    pos = jnp.arange(32)
+
+    def loss(q, k, v):
+        o = _attend_blockwise(q, k, v, 0, scale=0.35, cap=None, causal=True,
+                              window=None, is_local=False,
+                              q_chunk=8, kv_chunk=8)
+        return jnp.sum(o ** 2)
+
+    def loss_dense(q, k, v):
+        o = _attend_dense(q, k, v, pos, pos, scale=0.35, cap=None,
+                          causal=True, window=None, is_local=False)
+        return jnp.sum(o ** 2)
+
+    g1 = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_dense, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=1e-3)
+        assert float(jnp.max(jnp.abs(a))) > 0
+
+
+def test_grouped_vs_repeated_kv_equivalence():
+    """GQA grouped einsum == repeat-KV flat MHA (the two mesh layouts)."""
+    b, s, kh, g, hd = 2, 32, 2, 4, 16
+    q, k, v = _qkv(b, s, s, kh, g, hd)
+    pos = jnp.arange(s)
+    grouped = _attend_dense(q, k, v, pos, pos, scale=0.25, cap=None,
+                            causal=True, window=None, is_local=False)
+    # repeat path: (B,S,K,G,hd) -> (B,S,K*G,1,hd); kv repeated per group
+    q_flat = q.reshape(b, s, kh * g, 1, hd)
+    k_rep = jnp.repeat(k, g, axis=2)
+    v_rep = jnp.repeat(v, g, axis=2)
+    flat = _attend_dense(q_flat, k_rep, v_rep, pos, pos, scale=0.25,
+                         cap=None, causal=True, window=None, is_local=False)
+    np.testing.assert_allclose(
+        np.asarray(grouped).reshape(b, s, -1),
+        np.asarray(flat).reshape(b, s, -1), atol=2e-5, rtol=1e-4)
+
+
+def test_sliding_window_blocks_distant_tokens():
+    b, s, kh, g, hd = 1, 32, 1, 1, 8
+    q, k, v = _qkv(b, s, s, kh, g, hd)
+    pos = jnp.arange(s)
+    full = _attend_dense(q, k, v, pos, pos, scale=1.0, cap=None,
+                         causal=True, window=None, is_local=False)
+    windowed = _attend_dense(q, k, v, pos, pos, scale=1.0, cap=None,
+                             causal=True, window=4, is_local=True)
+    # within the first `window` positions outputs agree, beyond they differ
+    np.testing.assert_allclose(np.asarray(full)[:, :4],
+                               np.asarray(windowed)[:, :4], atol=1e-5)
+    assert not np.allclose(np.asarray(full)[:, 16:],
+                           np.asarray(windowed)[:, 16:])
+
+
+# ---------------------------------------------------------------------------
+# SSD property test: chunked == naive recurrence for random sizes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_naive(seed, chunk):
+    rng = np.random.default_rng(seed)
+    b, l, h, p, n = 2, 32, 3, 4, 8
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)).astype(np.float32))
+    a_dt = -jnp.asarray(rng.uniform(0.01, 0.5, (b, l, h)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(b, l, n)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(b, l, n)).astype(np.float32))
+    y, final = ssd_chunked(x, a_dt, bm, cm, chunk)
+    hstate = np.zeros((b, h, p, n))
+    xn, an, bn, cn = map(np.asarray, (x, a_dt, bm, cm))
+    ys = []
+    for t in range(l):
+        hstate = hstate * np.exp(an[:, t])[:, :, None, None] \
+            + np.einsum("bhp,bn->bhpn", xn[:, t], bn[:, t])
+        ys.append(np.einsum("bhpn,bn->bhp", hstate, cn[:, t]))
+    y_naive = np.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y), y_naive, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), hstate, atol=1e-4,
+                               rtol=1e-4)

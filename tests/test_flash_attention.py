@@ -1,0 +1,55 @@
+"""Flash-attention Pallas kernel vs dense oracle (shape/feature sweep)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+
+RNG = np.random.default_rng(0)
+
+CASES = [
+    # (b, s, h, kh, d, causal, softcap)
+    (2, 128, 4, 2, 64, True, None),      # GQA causal
+    (1, 256, 2, 2, 64, False, None),     # bidirectional MHA
+    (2, 128, 4, 1, 64, True, 30.0),      # MQA + softcap (gemma2-style)
+    (1, 512, 2, 2, 128, True, None),     # longer seq, MXU-width head
+]
+
+
+def _qkv(b, s, h, kh, d, dtype=np.float32):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)).astype(dtype))
+    k = jnp.asarray(RNG.normal(size=(b, s, kh, d)).astype(dtype))
+    v = jnp.asarray(RNG.normal(size=(b, s, kh, d)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,kh,d,causal,cap", CASES)
+def test_flash_matches_dense(b, s, h, kh, d, causal, cap):
+    q, k, v = _qkv(b, s, h, kh, d)
+    r = flash_attention(q, k, v, causal=causal, softcap=cap, mode="ref")
+    p = flash_attention(q, k, v, causal=causal, softcap=cap,
+                        mode="pallas_interpret", q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                               atol=5e-6, rtol=1e-5)
+
+
+def test_flash_chunk_invariance():
+    q, k, v = _qkv(1, 256, 2, 2, 64)
+    outs = [np.asarray(flash_attention(
+        q, k, v, causal=True, mode="pallas_interpret",
+        q_chunk=qc, kv_chunk=kc)) for qc, kc in [(32, 64), (128, 32),
+                                                 (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=5e-6, rtol=1e-5)
+
+
+def test_flash_bf16_inputs():
+    q, k, v = _qkv(1, 128, 2, 2, 64)
+    q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    r = flash_attention(q, k, v, mode="ref")
+    p = flash_attention(q, k, v, mode="pallas_interpret",
+                        q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(p, np.float32),
+                               atol=3e-2, rtol=3e-2)
+    assert p.dtype == jnp.bfloat16

@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) for quantization + tiling invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantization import (Calibrator, dequantize, fake_quantize,
+                                     qmax_for_bits, quantize)
+from repro.core.tiling import MXU_DIM, TilePlan, choose_plan, VMEM_BYTES
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+finite_f32 = st.floats(-1e4, 1e4, allow_nan=False, allow_infinity=False,
+                       width=32)
+
+
+@given(st.lists(finite_f32, min_size=1, max_size=64),
+       st.sampled_from([4, 8]))
+def test_roundtrip_error_bound(vals, bits):
+    """|dequant(quant(x)) - x| <= scale/2 elementwise (symmetric rounding)."""
+    x = jnp.asarray(np.array(vals, np.float32).reshape(1, -1))
+    q = quantize(x, channel_axes=(0,), bits=bits)
+    err = np.abs(np.asarray(dequantize(q)) - np.asarray(x))
+    bound = np.asarray(q.scale) / 2 + 1e-9
+    assert np.all(err <= bound)
+
+
+@given(st.lists(finite_f32, min_size=2, max_size=64).filter(
+    lambda v: len(v) % 2 == 0))
+def test_quantized_range(vals):
+    x = jnp.asarray(np.array(vals, np.float32).reshape(2, -1))
+    q = quantize(x, channel_axes=(0,))
+    v = np.asarray(q.values)
+    assert v.min() >= -127 and v.max() <= 127
+    assert np.all(np.asarray(q.scale) > 0)
+
+
+def test_zeros_quantize_to_zeros():
+    q = quantize(jnp.zeros((4, 8)), channel_axes=(0,))
+    assert np.all(np.asarray(q.values) == 0)
+    assert np.all(np.asarray(q.scale) == 1.0)
+    assert np.all(np.asarray(dequantize(q)) == 0.0)
+
+
+@given(st.integers(2, 8))
+def test_qmax(bits):
+    assert qmax_for_bits(bits) == 2 ** (bits - 1) - 1
+
+
+def test_per_channel_independence():
+    """Scaling one channel never changes another channel's quantization."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 16)).astype(np.float32)
+    q1 = quantize(jnp.asarray(x), channel_axes=(0,))
+    x2 = x.copy()
+    x2[0] *= 100.0
+    q2 = quantize(jnp.asarray(x2), channel_axes=(0,))
+    np.testing.assert_array_equal(np.asarray(q1.values)[1:],
+                                  np.asarray(q2.values)[1:])
+
+
+def test_fake_quantize_straight_through():
+    import jax
+    x = jnp.asarray(np.linspace(-2, 2, 32, dtype=np.float32).reshape(1, -1))
+    g = jax.grad(lambda v: jnp.sum(fake_quantize(v, channel_axes=(0,))))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.ones_like(np.asarray(g)))
+
+
+def test_calibrator_fixed_scale():
+    cal = Calibrator()
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        cal.observe(jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32)))
+    s = cal.scale
+    assert s > 0
+    q = cal.quantize(jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32)))
+    assert abs(float(q.scale.reshape(())) - s) < 1e-7 * s
+
+
+# ---------------------------------------------------------------------------
+# Tiling-plan invariants (the paper's DSE, automated)
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 4096), st.integers(1, 8192), st.integers(1, 8192))
+def test_choose_plan_fits_and_covers(m, k, n):
+    plan = choose_plan(m, k, n)
+    assert plan.fits_vmem(VMEM_BYTES // 2)
+    # full coverage: blocks tile the (padded) problem
+    assert plan.block_m % MXU_DIM == 0 or plan.block_m >= m
+    assert -(-m // plan.block_m) * plan.block_m >= m
+    assert -(-n // plan.block_n) * plan.block_n >= n
+    assert plan.k_steps * plan.block_k >= k
+
+
+@given(st.integers(64, 1024), st.integers(64, 4096), st.integers(64, 4096))
+def test_reuse_model_monotonic(m, k, n):
+    """Bigger block_m (more A rows resident) never increases B traffic."""
+    small = TilePlan(m, k, n, block_m=128, block_n=128, block_k=k)
+    big = TilePlan(m, k, n, block_m=512, block_n=128, block_k=k)
+    assert big.hbm_traffic <= small.hbm_traffic
+
+
+def test_paper_shape_plan_is_panel_resident():
+    """The DistilBERT shapes fit the persistent-A schedule (paper §4)."""
+    for (m, k, n) in [(64, 768, 768), (64, 768, 3072)]:
+        plan = choose_plan(m, k, n)
+        assert plan.k_steps == 1          # A panel holds the full K
+        assert plan.arithmetic_intensity > 100
