@@ -1,50 +1,72 @@
-"""Paper §5 'Handling partial tiles' — ~1-2% overhead for non-multiples.
+"""Paper §5 'Handling partial tiles' — padded-vs-native overhead, measured.
 
-On TPU the boundary handling is zero-padding to block multiples (exact in
-int8).  Overhead = padded FLOPs / useful FLOPs − 1, plus measured host
-delta between an aligned and an unaligned problem of equal useful work.
+The seed handled fractional tiles by zero-padding every operand to block
+multiples on the host (exact in int8, but it moves A/B through an HBM pad
+copy and the output through a slice copy, plus computes on the padded FLOP
+volume).  The dispatch subsystem handles edge blocks natively in-kernel
+(ceil grids + contraction iota masks, OOB stores dropped).  This benchmark
+reports both policies side by side on the same Pallas kernel:
+
+  * analytic: wasted-FLOP fraction of the pad policy (``dispatch.pad_overhead``)
+  * measured: host latency of ``partial="pad"`` vs ``partial="native"``
+    through the interpret-mode kernel (ordering-only on CPU — see
+    benchmarks/common.py), and the delta between them.
+
+Paper reference: ~1-2% time difference for fractional tiles.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_table, timeit
+from repro.core.dispatch import pad_overhead, select_plan
 from repro.core.quantization import quantize
-from repro.core.tiling import choose_plan, round_up
 from repro.kernels.tiled_matmul.ops import tiled_matmul
 
 CASES = [(256, 768, 1024, "aligned"), (250, 763, 1021, "partial"),
          (64, 768, 3072, "paper ffn"), (61, 765, 3071, "paper ffn partial")]
 
 
-def run() -> list[dict]:
+def run(iters: int = 3) -> list[dict]:
     rows = []
     rng = np.random.default_rng(0)
     for m, k, n, tag in CASES:
-        plan = choose_plan(m, k, n)
-        mp = round_up(m, plan.block_m)
-        np_ = round_up(n, plan.block_n)
-        kp = k
-        pad_overhead = (mp * kp * np_) / (m * k * n) - 1
+        plan = select_plan(m, k, n, out_dtype=jnp.float32, interpret=True)
         a = quantize(jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)),
                      channel_axes=(0,))
         b = quantize(jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)),
                      channel_axes=(1,))
-        f = jax.jit(lambda av, asq, bv, bs: tiled_matmul(
-            type(a)(av, asq), type(b)(bv, bs), out_dtype=jnp.float32,
-            mode="ref"))
-        t, _ = timeit(f, a.values, a.scale, b.values, b.scale, iters=3)
-        rows.append({"case": tag, "shape": f"{m}x{k}x{n}",
-                     "pad_flop_overhead_%": 100 * pad_overhead,
-                     "host_latency_s": t})
+
+        def f(policy):
+            return lambda: tiled_matmul(a, b, out_dtype=jnp.float32,
+                                        mode="pallas_interpret",
+                                        partial=policy)
+
+        t_pad, out_pad = timeit(f("pad"), iters=iters, warmup=1)
+        t_nat, out_nat = timeit(f("native"), iters=iters, warmup=1)
+        assert np.array_equal(np.asarray(out_pad), np.asarray(out_nat)), \
+            "pad and native policies disagree"
+        rows.append({
+            "case": tag, "shape": f"{m}x{k}x{n}",
+            "pad_flop_overhead_%": 100 * pad_overhead(m, k, n, plan),
+            "t_padded_s": t_pad,
+            "t_native_s": t_nat,
+            "native_saves_%": 100 * (t_pad - t_nat) / t_pad,
+        })
     return rows
 
 
 def main():
-    print_table("Partial-tile overhead (paper §5)", run())
-    print("paper reference: ~1-2% time difference for fractional tiles")
+    print_table("Partial-tile policy: padded vs native-masked (paper §5)",
+                run())
+    print("paper reference: ~1-2% time difference for fractional tiles. "
+          "The analytic column is the real story: the pad policy burns "
+          "that extra FLOP volume AND a pad+slice HBM round trip, which "
+          "the native policy eliminates.  CPU interpret-mode wall times "
+          "often invert (the interpreter emulates edge blocks with "
+          "per-block dynamic slices); on TPU the masked path wins — see "
+          "benchmarks/common.py on host timings being ordering-only.")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,388 @@
+"""GEMM dispatch: one plan-selection + partial-tile policy for every hot path.
+
+The paper's accelerator picks its tile size (T=32) from a one-off DSE sweep
+measured on hardware (§5 "Tile size selection"); FTRANS and later FPGA work
+show the same lesson — analytic models get you the right *neighbourhood*,
+measurement picks the winner.  This module is the TPU analogue: every
+quantized GEMM in the repo (``quantized_matmul``, ``fused_qkv``,
+``quantized_linear``) routes its block-shape choice through ``select_plan``,
+which layers an *empirical autotuner* with a persistent JSON cache on top of
+the analytic ``choose_plan`` model.
+
+Modes (env var ``REPRO_TUNE``):
+
+  * ``off``    — pure analytic ``choose_plan`` (the seed behaviour).
+  * ``cached`` — default: use a measured plan if the persistent cache has one
+                 for this (M, K, N, dtype) key, else fall back to the
+                 analytic plan.  Never measures, never writes.
+  * ``full``   — on a cache miss, *measure* the candidate plans with real
+                 kernel executions on the current backend, store the winner
+                 in the cache, and use it from then on.
+
+The cache lives at ``$REPRO_TUNE_CACHE`` (default
+``~/.cache/repro/gemm_tune.json``); measured entries are keyed by
+``MxKxN:dtype:backend`` (tuning on one backend never clobbers or shadows
+another's winners) and the unqualified ``MxKxN:dtype`` key is the
+hand-shipped-table escape hatch, trusted on any backend — a tuned serving
+container ships its table as a plain JSON artifact.
+
+Partial tiles: the dispatcher's policy is **no host-side padding** on the
+Pallas path — edge blocks are handled natively in-kernel (iota masks on the
+contraction dim, out-of-bounds stores dropped by Pallas).  ``padded_shape``
+and ``pad_overhead`` remain available for the benchmarks that quantify what
+the old zero-pad policy cost.
+
+Plan selection happens at Python trace time (shapes are static under jit),
+so ``REPRO_TUNE`` changes require re-tracing (new process or cleared jit
+cache) to take effect.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import (MXU_DIM, VMEM_BYTES, TilePlan, ceil_div,
+                               choose_plan, round_up)
+
+__all__ = [
+    "select_plan",
+    "select_fused_blocks",
+    "candidate_plans",
+    "tune",
+    "tune_mode",
+    "cache_path",
+    "load_cache",
+    "clear_cache",
+    "reset_cache_state",
+    "padded_shape",
+    "pad_overhead",
+]
+
+TUNE_ENV = "REPRO_TUNE"
+CACHE_ENV = "REPRO_TUNE_CACHE"
+ITERS_ENV = "REPRO_TUNE_ITERS"
+_VALID_MODES = ("off", "cached", "full")
+
+# in-process mirror of the JSON file, so repeated trace-time lookups do not
+# re-read the file for every matmul in a model
+_mem_cache: dict[str, dict] | None = None
+_mem_cache_file: str | None = None
+
+
+def tune_mode() -> str:
+    mode = os.environ.get(TUNE_ENV, "cached")
+    if mode not in _VALID_MODES:
+        raise ValueError(
+            f"{TUNE_ENV} must be one of {_VALID_MODES}, got {mode!r}")
+    return mode
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        CACHE_ENV,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "gemm_tune.json"))
+
+
+def _key(m: int, k: int, n: int, out_dtype, backend: str | None = None) -> str:
+    """Cache key.  Measured entries are backend-qualified so tuning on one
+    backend can never clobber (or shadow) another backend's winners; the
+    unqualified key is reserved for hand-shipped tables, trusted anywhere."""
+    base = f"{m}x{k}x{n}:{jnp.dtype(out_dtype).name}"
+    return f"{base}:{backend}" if backend else base
+
+
+def load_cache() -> dict[str, dict]:
+    global _mem_cache, _mem_cache_file
+    path = cache_path()
+    if _mem_cache is not None and _mem_cache_file == path:
+        return _mem_cache
+    table: dict[str, dict] = {}
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if isinstance(raw, dict):
+            table = {k: v for k, v in raw.items() if isinstance(v, dict)}
+    except (OSError, ValueError):
+        pass                       # missing or corrupt cache = empty table
+    _mem_cache = table
+    _mem_cache_file = path
+    return table
+
+
+def _store(key: str, entry: dict) -> None:
+    """Read-merge-write so concurrent tuners lose at most their own entry."""
+    global _mem_cache, _mem_cache_file
+    path = cache_path()
+    _mem_cache = None              # force re-read
+    table = dict(load_cache())
+    table[key] = entry
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(table, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+    _mem_cache = table
+    _mem_cache_file = path
+
+
+def reset_cache_state() -> None:
+    """Drop the in-process cache mirror (file untouched).
+
+    Call after changing ``REPRO_TUNE_CACHE`` mid-process (tests, benchmarks)
+    so the next lookup re-reads the new file.
+    """
+    global _mem_cache, _mem_cache_file
+    _mem_cache = None
+    _mem_cache_file = None
+
+
+def clear_cache() -> None:
+    reset_cache_state()
+    try:
+        os.unlink(cache_path())
+    except OSError:
+        pass
+
+
+def _plan_from_entry(m: int, k: int, n: int, out_bytes: int,
+                     entry: dict) -> TilePlan | None:
+    try:
+        plan = TilePlan(m, k, n, block_m=int(entry["block_m"]),
+                        block_n=int(entry["block_n"]),
+                        # hand-shipped panel-resident entries may omit
+                        # block_k; full K is what panel-resident means
+                        block_k=int(entry.get("block_k", k)),
+                        out_bytes=out_bytes)
+    except (KeyError, TypeError, ValueError):
+        return None
+    # hold cached (possibly hand-shipped / version-skewed) entries to the
+    # same half-VMEM headroom the tuner's own candidates are generated under
+    return plan if plan.fits_vmem(VMEM_BYTES // 2) else None
+
+
+def _measurement_backend(interpret: bool | None) -> str:
+    if interpret or (interpret is None and jax.default_backend() != "tpu"):
+        return "interpret"
+    return jax.default_backend()
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation — the analytic model seeds the search space
+# ---------------------------------------------------------------------------
+def candidate_plans(m: int, k: int, n: int, *, out_bytes: int = 2,
+                    vmem_budget: int = VMEM_BYTES // 2,
+                    max_candidates: int = 8) -> list[TilePlan]:
+    """Feasible TilePlans around the analytic pick, analytic pick first.
+
+    This is the paper's T∈{16,32,64} sweep generalised: block_m/block_n vary
+    over MXU multiples (plus the sublane-aligned small-M panel), block_k over
+    {K} ∪ power-of-two splits.  Everything returned fits the VMEM budget.
+    """
+    seed = choose_plan(m, k, n, out_bytes=out_bytes, vmem_budget=vmem_budget)
+    m_cap = round_up(m, 8) if m < MXU_DIM else round_up(m, MXU_DIM)
+    n_cap = round_up(n, MXU_DIM)
+
+    bms = sorted({min(b, m_cap) for b in (128, 256, 512)})
+    bns = sorted({min(b, n_cap) for b in (128, 256, 512)})
+    bks = [k] + [bk for bk in (2048, 1024, 512, 256) if bk < k]
+
+    plans: list[TilePlan] = [seed]
+    seen = {(seed.block_m, seed.block_n, seed.block_k)}
+    for bk in bks:
+        for bm in bms:
+            for bn in bns:
+                if (bm, bn, bk) in seen:
+                    continue
+                plan = TilePlan(m, k, n, block_m=bm, block_n=bn, block_k=bk,
+                                out_bytes=out_bytes)
+                if not plan.fits_vmem(vmem_budget):
+                    continue
+                seen.add((bm, bn, bk))
+                plans.append(plan)
+    # rank non-seed candidates by the analytic estimate so a small
+    # max_candidates still measures the most promising schedules
+    head, tail = plans[:1], plans[1:]
+    tail.sort(key=lambda p: p.time_estimate(int8=True))
+    return (head + tail)[:max_candidates]
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+def _measure_plan(m: int, k: int, n: int, plan: TilePlan, out_dtype,
+                  interpret: bool, iters: int) -> float:
+    """Median wall-clock of the real kernel under ``plan`` (seconds)."""
+    from repro.kernels.tiled_matmul.kernel import tiled_matmul_kernel
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-127, 128, (m, k), dtype=np.int8))
+    b = jnp.asarray(rng.integers(-127, 128, (k, n), dtype=np.int8))
+    sa = jnp.ones((m, 1), jnp.float32)
+    sb = jnp.ones((1, n), jnp.float32)
+
+    block_k = None if plan.k_steps == 1 else plan.block_k
+    fn = jax.jit(lambda av, bv: tiled_matmul_kernel(
+        av, sa, bv, sb, None, block_m=plan.block_m, block_n=plan.block_n,
+        block_k=block_k, out_dtype=out_dtype, interpret=interpret))
+    jax.block_until_ready(fn(a, b))            # compile + warm
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a, b))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def tune(m: int, k: int, n: int, *, out_dtype=jnp.bfloat16,
+         interpret: bool | None = None, iters: int | None = None,
+         max_candidates: int = 8,
+         results: list | None = None) -> TilePlan:
+    """Measure candidate plans for (M, K, N), persist and return the winner.
+
+    ``interpret`` defaults to True off-TPU so tuning works in this container;
+    interpreter timings still rank *schedules* (grid shape, K-split depth)
+    even though absolute numbers are host-bound.  Pass ``results`` to
+    receive every ``(plan, seconds)`` measurement from this single pass
+    (benchmarks report them; the winner is consistent by construction).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if iters is None:
+        iters = int(os.environ.get(ITERS_ENV, "3"))
+    out_bytes = jnp.dtype(out_dtype).itemsize
+    backend = _measurement_backend(interpret)
+    best_plan, best_t = None, float("inf")
+    n_results = 0
+    for plan in candidate_plans(m, k, n, out_bytes=out_bytes,
+                                max_candidates=max_candidates):
+        t = _measure_plan(m, k, n, plan, out_dtype, interpret, iters)
+        n_results += 1
+        if results is not None:
+            results.append((plan, t))
+        if t < best_t:
+            best_plan, best_t = plan, t
+    assert best_plan is not None
+    _store(_key(m, k, n, out_dtype, backend), {
+        "block_m": best_plan.block_m,
+        "block_n": best_plan.block_n,
+        "block_k": best_plan.block_k,
+        "us": best_t * 1e6,
+        "backend": backend,
+        "candidates": n_results,
+    })
+    return best_plan
+
+
+# ---------------------------------------------------------------------------
+# The dispatch entry point
+# ---------------------------------------------------------------------------
+def select_plan(m: int, k: int, n: int, *, out_dtype=jnp.bfloat16,
+                interpret: bool | None = None) -> TilePlan:
+    """Plan for C[M,N] = A[M,K] @ B[K,N]: tuned if available, analytic else.
+
+    This is the single funnel every quantized GEMM goes through; callers
+    never call ``choose_plan`` directly on a hot path.
+    """
+    out_bytes = jnp.dtype(out_dtype).itemsize
+    mode = tune_mode()
+    if mode == "off":
+        return choose_plan(m, k, n, out_bytes=out_bytes)
+    # a plan measured on a different backend ranks a different machine's
+    # schedules (interpret timings are host-bound), so measured entries are
+    # keyed per backend; the unqualified key is the hand-shipped-table
+    # escape hatch, trusted on any backend
+    table = load_cache()
+    backend = _measurement_backend(interpret)
+    for key in (_key(m, k, n, out_dtype, backend),
+                _key(m, k, n, out_dtype)):
+        entry = table.get(key)
+        if entry is not None:
+            plan = _plan_from_entry(m, k, n, out_bytes, entry)
+            if plan is not None:
+                return plan
+    if mode == "full":
+        try:
+            return tune(m, k, n, out_dtype=out_dtype, interpret=interpret)
+        except Exception as e:     # measurement must never take down a trace
+            warnings.warn(
+                f"REPRO_TUNE=full: measurement for ({m},{k},{n}) failed "
+                f"({type(e).__name__}: {e}); using the analytic plan")
+            return choose_plan(m, k, n, out_bytes=out_bytes)
+    return choose_plan(m, k, n, out_bytes=out_bytes)
+
+
+def _fused_qkv_footprint(bm: int, bn: int, k: int, out_bytes: int) -> int:
+    """VMEM bytes of the fused QKV kernel: persistent A panel (bm, K) +
+    three double-buffered streamed weight blocks (K, bn) + three outputs."""
+    a = bm * k                          # int8 activation panel
+    w = 3 * 2 * k * bn                  # Wq/Wk/Wv, double-buffered
+    out = 3 * bm * bn * out_bytes
+    scales = (bm + 6 * bn) * 4
+    return a + w + out + scales
+
+
+def select_fused_blocks(m: int, k: int, n: int, *, out_dtype=jnp.bfloat16,
+                        interpret: bool | None = None,
+                        vmem_budget: int = VMEM_BYTES // 2) -> tuple[int,
+                                                                    int]:
+    """(block_m, block_n) for the fused QKV kernel.
+
+    The fused kernel is panel-resident only (full K, three weight streams),
+    so a plan tuned for the single-GEMM kernel — whose footprint model
+    assumes one weight stream and possibly a K-split block_k — cannot be
+    applied blindly: revalidate the dispatcher's pick against the fused
+    footprint and shrink down the MXU ladder when it does not fit.
+    """
+    out_bytes = jnp.dtype(out_dtype).itemsize
+    plan = select_plan(m, k, n, out_dtype=out_dtype, interpret=interpret)
+    if plan.k_steps == 1 and _fused_qkv_footprint(
+            plan.block_m, plan.block_n, k, out_bytes) <= vmem_budget:
+        return plan.block_m, plan.block_n
+    m_cap = round_up(m, 8) if m < MXU_DIM else round_up(m, MXU_DIM)
+    n_cap = round_up(n, MXU_DIM)
+    for bm in (512, 256, 128):
+        for bn in (512, 256, 128):
+            bm2, bn2 = min(bm, m_cap), min(bn, n_cap)
+            if _fused_qkv_footprint(bm2, bn2, k, out_bytes) <= vmem_budget:
+                return bm2, bn2
+    # huge-K last resort: the minimum MXU-aligned panel (callers that truly
+    # exceed VMEM here need a K-split fused schedule — see ROADMAP)
+    return min(128, m_cap), min(128, n_cap)
+
+
+# ---------------------------------------------------------------------------
+# Partial-tile accounting (the policy the dispatcher replaced, kept for
+# benchmarks/partial_tile.py to quantify the win)
+# ---------------------------------------------------------------------------
+def padded_shape(m: int, k: int, n: int, plan: TilePlan) -> tuple[int, int,
+                                                                  int]:
+    """The block-multiple shape the old zero-pad policy would compute on."""
+    kp = round_up(k, plan.block_k) if plan.k_steps > 1 else k
+    return (round_up(m, plan.block_m), kp, round_up(n, plan.block_n))
+
+
+def pad_overhead(m: int, k: int, n: int, plan: TilePlan) -> float:
+    """Wasted-FLOP fraction of the zero-pad policy: padded/useful − 1."""
+    mp, kp, np_ = padded_shape(m, k, n, plan)
+    return (mp * kp * np_) / (m * k * n) - 1.0
+
+
+def grid_shape(m: int, n: int, plan: TilePlan) -> tuple[int, ...]:
+    """Pallas grid for ``plan`` under the native partial-tile policy."""
+    g = (ceil_div(m, plan.block_m), ceil_div(n, plan.block_n))
+    return g if plan.k_steps == 1 else g + (plan.k_steps,)

@@ -13,7 +13,9 @@ modes, selectable per-matmul-family from the arch config:
                 weight HBM traffic + memory, activation stays bf16)
   * ``w8a8``  — the paper's technique: int8×int8→int32 + dequant epilogue,
                 dynamic per-token activation scales, per-channel weight
-                scales, routed through the tiled-GEMM kernel.
+                scales, routed through the tiled-GEMM kernel via the GEMM
+                dispatcher (``core.dispatch``: autotuned block shapes under
+                REPRO_TUNE, native partial tiles — no host-side padding).
 
 Parameters are stored as master floats for training; ``quantize_params``
 converts a pytree for serving (the paper's offline static quantization).

@@ -13,6 +13,13 @@ instead of three times.
 GQA support: Nk = Nv may be smaller than Nq (fewer KV heads).  The grid is
 sized for Q's column blocks; K/V stores are guarded with ``pl.when`` and
 their index maps clamped, so trailing grid steps only compute Q.
+
+Partial tiles (paper §5): shapes need NOT be block multiples.  The grid is
+ceil-divided; the contraction dim K spans the full (unpadded) axis inside
+every invocation, so edge-block garbage (Pallas's undefined out-of-range
+fill) only ever lands in out-of-range M-rows / N-cols whose stores Pallas
+drops — no host-side padding and no in-kernel masks are required here
+(contrast the K-split tiled_matmul schedule, which must mask).
 """
 from __future__ import annotations
 
@@ -21,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.tiling import ceil_div
 
 _INT8_DOT = functools.partial(
     jax.lax.dot_general,
@@ -53,7 +62,7 @@ def _fused_qkv_kernel(a_ref, wq_ref, wk_ref, wv_ref,
 def fused_qkv_kernel(a_values, a_scale, wq, sq, wk, sk, wv, sv, *,
                      block_m: int = 256, block_n: int = 256,
                      out_dtype=jnp.bfloat16, interpret: bool = False):
-    """Shapes must be block multiples (ops.py pads partial tiles).
+    """Shapes may be arbitrary — edge blocks are handled natively.
 
     a_values (M, K) int8; a_scale (M, 1) f32
     wq (K, Nq), wk/wv (K, Nkv) int8; sq (1, Nq), sk/sv (1, Nkv) f32
@@ -62,10 +71,9 @@ def fused_qkv_kernel(a_values, a_scale, wq, sq, wk, sk, wv, sv, *,
     m, k = a_values.shape
     nq = wq.shape[1]
     nkv = wk.shape[1]
-    assert wv.shape[1] == nkv and m % block_m == 0
-    assert nq % block_n == 0 and nkv % block_n == 0
-    nq_blocks = nq // block_n
-    nkv_blocks = nkv // block_n
+    assert wv.shape[1] == nkv
+    nq_blocks = ceil_div(nq, block_n)
+    nkv_blocks = ceil_div(nkv, block_n)
     assert nkv_blocks <= nq_blocks, "Q must have >= as many column blocks"
 
     clamp = nkv_blocks - 1
@@ -79,7 +87,7 @@ def fused_qkv_kernel(a_values, a_scale, wq, sq, wk, sk, wv, sv, *,
     def kv_scale_map(i, j):
         return (0, jnp.minimum(j, clamp))
 
-    grid = (m // block_m, nq_blocks)
+    grid = (ceil_div(m, block_m), nq_blocks)
     kernel = functools.partial(_fused_qkv_kernel, nkv_blocks=nkv_blocks,
                                out_dtype=out_dtype)
     return pl.pallas_call(

@@ -1,11 +1,17 @@
-"""Jit'd wrapper for the fused QKV projection (update_A analogue)."""
+"""Jit'd wrapper for the fused QKV projection (update_A analogue).
+
+Block shapes route through the GEMM dispatcher (``core.dispatch``) using the
+Q projection's (M, K, Nq) as the tuning key — Q has the most column blocks,
+so its sweep dominates the schedule.  Partial tiles are handled natively by
+the kernel (no host-side ``jnp.pad``), the same policy as ``tiled_matmul``.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import select_fused_blocks
 from repro.core.quantization import QTensor
-from repro.core.tiling import round_up
 from repro.kernels.fused_qkv import ref as _ref
 from repro.kernels.fused_qkv.kernel import fused_qkv_kernel
 from repro.kernels.tiled_matmul.ops import kernel_mode
@@ -13,16 +19,8 @@ from repro.kernels.tiled_matmul.ops import kernel_mode
 __all__ = ["fused_qkv"]
 
 
-def _pad_w(w: QTensor, n_to: int):
-    k, n = w.values.shape
-    values = jnp.pad(w.values, ((0, 0), (0, n_to - n)))
-    scale = jnp.pad(jnp.broadcast_to(w.scale, (1, n)).astype(jnp.float32),
-                    ((0, 0), (0, n_to - n)), constant_values=1.0)
-    return values, scale
-
-
 def fused_qkv(a: QTensor, wq: QTensor, wk: QTensor, wv: QTensor, *,
-              block_m: int = 256, block_n: int = 256,
+              block_m: int | None = None, block_n: int | None = None,
               out_dtype=jnp.bfloat16, mode: str | None = None):
     """(q, k, v) = dequant(A_q @ [Wq|Wk|Wv]) with A loaded once.
 
@@ -32,24 +30,21 @@ def fused_qkv(a: QTensor, wq: QTensor, wk: QTensor, wv: QTensor, *,
     m, k = a.values.shape
     nq, nkv = wq.values.shape[1], wk.values.shape[1]
     a_scale = jnp.broadcast_to(a.scale.astype(jnp.float32), (m, 1))
+    sq = jnp.broadcast_to(wq.scale.astype(jnp.float32), (1, nq))
+    sk = jnp.broadcast_to(wk.scale.astype(jnp.float32), (1, nkv))
+    sv = jnp.broadcast_to(wv.scale.astype(jnp.float32), (1, nkv))
     if mode == "ref":
-        return _ref.fused_qkv_ref(
-            a.values, a_scale,
-            wq.values, jnp.broadcast_to(wq.scale.astype(jnp.float32), (1, nq)),
-            wk.values, jnp.broadcast_to(wk.scale.astype(jnp.float32), (1, nkv)),
-            wv.values, jnp.broadcast_to(wv.scale.astype(jnp.float32), (1, nkv)),
-            out_dtype=out_dtype)
+        return _ref.fused_qkv_ref(a.values, a_scale, wq.values, sq,
+                                  wk.values, sk, wv.values, sv,
+                                  out_dtype=out_dtype)
 
-    mp = round_up(m, block_m)
-    nqp = round_up(nq, block_n)
-    nkvp = round_up(nkv, block_n)
-    av = jnp.pad(a.values, ((0, mp - m), (0, 0)))
-    sa = jnp.pad(a_scale, ((0, mp - m), (0, 0)), constant_values=1.0)
-    wqv, sq = _pad_w(wq, nqp)
-    wkv, sk = _pad_w(wk, nkvp)
-    wvv, sv = _pad_w(wv, nkvp)
-    q, kk, v = fused_qkv_kernel(av, sa, wqv, sq, wkv, sk, wvv, sv,
-                                block_m=block_m, block_n=block_n,
-                                out_dtype=out_dtype,
-                                interpret=(mode == "pallas_interpret"))
-    return q[:m, :nq], kk[:m, :nkv], v[:m, :nkv]
+    interpret = mode == "pallas_interpret"
+    if block_m is None or block_n is None:
+        bm, bn = select_fused_blocks(m, k, nq, out_dtype=out_dtype,
+                                     interpret=interpret)
+        block_m = block_m or bm
+        block_n = block_n or bn
+    return fused_qkv_kernel(a.values, a_scale, wq.values, sq,
+                            wk.values, sk, wv.values, sv,
+                            block_m=block_m, block_n=block_n,
+                            out_dtype=out_dtype, interpret=interpret)

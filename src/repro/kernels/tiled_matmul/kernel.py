@@ -14,17 +14,29 @@ This is the TPU-native adaptation of the paper's accelerator (DESIGN.md §2):
                                        dot_general(int8, int8 → int32)
   dequant epilogue in PL               fused f32 scale(+bias) epilogue on the
                                        final K step, written once per block
-  partial tiles via boundary checks    ops.py zero-pads to block multiples
-                                       (int8 zero padding is exact)
+  partial tiles via boundary checks    native edge blocks (paper §5): ceil
+                                       grids + in-kernel iota masking on the
+                                       contraction dim — no host-side pad
 
 Two grid schedules are provided:
 
-  * ``k_steps == 1`` — "panel-resident" schedule (the paper's): grid (M/bm,
-    N/bn), the whole K reduction happens in one kernel invocation with the A
-    panel (bm, K) held in VMEM across the full sweep of B blocks.
-  * ``k_steps > 1`` — K-split schedule for large K: grid (M/bm, N/bn, K/bk)
-    with an int32 VMEM accumulator initialised at k==0 and flushed through the
-    dequant epilogue at k==k_steps-1 (paper §8 "double-buffered streaming").
+  * ``k_steps == 1`` — "panel-resident" schedule (the paper's): grid
+    (⌈M/bm⌉, ⌈N/bn⌉), the whole K reduction happens in one kernel invocation
+    with the A panel (bm, K) held in VMEM across the full sweep of B blocks.
+  * ``k_steps > 1`` — K-split schedule for large K: grid (⌈M/bm⌉, ⌈N/bn⌉,
+    ⌈K/bk⌉) with an int32 VMEM accumulator initialised at k==0 and flushed
+    through the dequant epilogue at k==k_steps-1 (paper §8 "double-buffered
+    streaming").
+
+Partial-tile semantics (paper §5 "Handling partial tiles"): shapes need NOT
+be block multiples.  Pallas materialises out-of-range input blocks with
+undefined fill (NaN / int-min in interpret mode) and *drops* out-of-range
+output stores, so garbage in edge M-rows / N-cols never reaches the logical
+output.  The one place undefined fill would corrupt valid results is the
+contraction dim in the K-split schedule — an out-of-range K slab accumulates
+into valid (i, j) outputs — so the kernel zeroes A's out-of-range K columns
+with a broadcasted-iota mask (int8 zero annihilates whatever B holds there,
+keeping the int32 accumulation bit-exact vs the reference).
 """
 from __future__ import annotations
 
@@ -34,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tiling import ceil_div
 
 _INT8_DOT = functools.partial(
     jax.lax.dot_general,
@@ -51,7 +65,11 @@ def _epilogue(acc, sa, sb, bias, out_dtype):
 
 
 def _matmul_kernel_panel(a_ref, b_ref, sa_ref, sb_ref, *rest, out_dtype):
-    """Panel-resident schedule: one invocation covers the full K reduction."""
+    """Panel-resident schedule: one invocation covers the full K reduction.
+
+    The A block spans the entire (unpadded) K, so no contraction masking is
+    needed; M/N edge garbage lands only in dropped out-of-range stores.
+    """
     if len(rest) == 2:
         bias_ref, o_ref = rest
         bias = bias_ref[...]
@@ -62,8 +80,15 @@ def _matmul_kernel_panel(a_ref, b_ref, sa_ref, sb_ref, *rest, out_dtype):
     o_ref[...] = _epilogue(acc, sa_ref[...], sb_ref[...], bias, out_dtype)
 
 
-def _matmul_kernel_ksplit(a_ref, b_ref, sa_ref, sb_ref, *rest, out_dtype):
-    """K-split schedule with an int32 VMEM accumulator."""
+def _matmul_kernel_ksplit(a_ref, b_ref, sa_ref, sb_ref, *rest,
+                          out_dtype, k_dim, block_k):
+    """K-split schedule with an int32 VMEM accumulator.
+
+    ``k_dim`` is the *logical* K; when it is not a block_k multiple the final
+    K step masks A's out-of-range columns to zero (iota mask) so the
+    undefined fill Pallas reads past the array edge cannot pollute the
+    accumulator for valid output positions.
+    """
     if len(rest) == 3:
         bias_ref, o_ref, acc_ref = rest
         bias = bias_ref[...]
@@ -75,7 +100,12 @@ def _matmul_kernel_ksplit(a_ref, b_ref, sa_ref, sb_ref, *rest, out_dtype):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _INT8_DOT(a_ref[...], b_ref[...])
+    a = a_ref[...]
+    if k_dim % block_k:
+        valid_k = k_dim - pl.program_id(2) * block_k   # > block_k off-edge
+        col = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        a = jnp.where(col < valid_k, a, 0)
+    acc_ref[...] += _INT8_DOT(a, b_ref[...])
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
@@ -90,8 +120,9 @@ def tiled_matmul_kernel(a_values: jax.Array, a_scale: jax.Array,
                         block_k: int | None = None,
                         out_dtype=jnp.bfloat16,
                         interpret: bool = False) -> jax.Array:
-    """Raw pallas_call wrapper.  Shapes must already be block-multiples
-    (ops.py handles padding / partial tiles).
+    """Raw pallas_call wrapper.  Shapes may be arbitrary — edge blocks are
+    handled natively (ceil grid + in-kernel contraction masking); the output
+    is the exact logical (M, N).
 
     a_values (M, K) int8, a_scale (M, 1) f32
     b_values (K, N) int8, b_scale (1, N) f32
@@ -100,16 +131,15 @@ def tiled_matmul_kernel(a_values: jax.Array, a_scale: jax.Array,
     m, k = a_values.shape
     k2, n = b_values.shape
     assert k == k2, (a_values.shape, b_values.shape)
-    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
     assert a_scale.shape == (m, 1) and b_scale.shape == (1, n)
 
-    k_steps = 1 if block_k is None else -(-k // block_k)
+    k_steps = 1 if block_k is None else ceil_div(k, block_k)
     has_bias = bias is not None
     out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
 
     if k_steps == 1:
         # Paper schedule: A panel persistent across the B-block sweep.
-        grid = (m // block_m, n // block_n)
+        grid = (ceil_div(m, block_m), ceil_div(n, block_n))
         in_specs = [
             pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),   # A: j-invariant
             pl.BlockSpec((k, block_n), lambda i, j: (0, j)),   # B: streamed
@@ -130,8 +160,7 @@ def tiled_matmul_kernel(a_values: jax.Array, a_scale: jax.Array,
             interpret=interpret,
         )(*operands)
 
-    assert k % block_k == 0, (k, block_k)
-    grid = (m // block_m, n // block_n, k_steps)
+    grid = (ceil_div(m, block_m), ceil_div(n, block_n), k_steps)
     in_specs = [
         pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
@@ -142,7 +171,8 @@ def tiled_matmul_kernel(a_values: jax.Array, a_scale: jax.Array,
     if has_bias:
         in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
         operands.append(bias.reshape(1, n))
-    kernel = functools.partial(_matmul_kernel_ksplit, out_dtype=out_dtype)
+    kernel = functools.partial(_matmul_kernel_ksplit, out_dtype=out_dtype,
+                               k_dim=k, block_k=block_k)
     return pl.pallas_call(
         kernel,
         grid=grid,

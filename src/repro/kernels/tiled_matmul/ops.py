@@ -1,8 +1,9 @@
 """Public jit'd wrapper for the tiled int8 GEMM.
 
-Handles: partial tiles (zero-padding, exact for int8 — paper §5 "Handling
-partial tiles"), block-shape auto-selection via the analytic tiling model,
-and backend dispatch:
+Handles: plan selection via the GEMM dispatcher (``core.dispatch`` — tuned
+plans when the autotuner cache has one, analytic model otherwise), native
+partial tiles (paper §5: edge blocks masked in-kernel, NO host-side
+``jnp.pad`` of operands on the Pallas path), and backend dispatch:
 
   REPRO_KERNELS=ref                -> pure-jnp oracle (default on CPU: the
                                       multi-pod dry-run compiles this path)
@@ -11,6 +12,10 @@ and backend dispatch:
 
 Both paths share the same dequant-epilogue math, so results are bitwise
 identical; tests assert this across shape/dtype sweeps.
+
+``partial="pad"`` retains the seed's zero-pad-to-block-multiples policy
+(exact in int8) purely so ``benchmarks/partial_tile.py`` can measure what
+the pad/slice copies cost versus the native path.
 """
 from __future__ import annotations
 
@@ -20,8 +25,9 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import select_plan
 from repro.core.quantization import QTensor, quantize
-from repro.core.tiling import MXU_DIM, choose_plan, round_up
+from repro.core.tiling import MXU_DIM, round_up
 from repro.kernels.tiled_matmul import ref as _ref
 from repro.kernels.tiled_matmul.kernel import tiled_matmul_kernel
 
@@ -39,12 +45,16 @@ def tiled_matmul(a: QTensor, b: QTensor, bias: jax.Array | None = None, *,
                  block_m: int | None = None, block_n: int | None = None,
                  block_k: int | None = None,
                  out_dtype=jnp.bfloat16,
-                 mode: str | None = None) -> jax.Array:
+                 mode: str | None = None,
+                 partial: str = "native") -> jax.Array:
     """C = dequant(A_q @ B_q) + bias for quantized operands.
 
     ``a``: QTensor (M, K) with per-row (M,1) / per-tensor scale.
     ``b``: QTensor (K, N) with per-col (1,N) / per-tensor scale.
+    ``partial``: "native" (edge blocks in-kernel) or "pad" (legacy zero-pad,
+    kept for the partial-tile benchmark).
     """
+    assert partial in ("native", "pad"), partial
     mode = mode or kernel_mode()
     m, k = a.values.shape
     _, n = b.values.shape
@@ -57,24 +67,45 @@ def tiled_matmul(a: QTensor, b: QTensor, bias: jax.Array | None = None, *,
 
     interpret = mode == "pallas_interpret"
     if block_m is None or block_n is None:
-        plan = choose_plan(m, k, n, out_bytes=jnp.dtype(out_dtype).itemsize)
+        plan = select_plan(m, k, n, out_dtype=out_dtype, interpret=interpret)
         block_m = block_m or plan.block_m
         block_n = block_n or plan.block_n
         if block_k is None and plan.k_steps > 1:
             block_k = plan.block_k
 
-    # Partial tiles: zero-pad up to block multiples (exact in int8).
+    if partial == "pad":
+        return _tiled_matmul_padded(
+            a.values, a_scale, b.values, b_scale, bias, block_m=block_m,
+            block_n=block_n, block_k=block_k, out_dtype=out_dtype,
+            interpret=interpret)
+
+    bi = bias.reshape(1, n).astype(jnp.float32) if bias is not None else None
+    return tiled_matmul_kernel(a.values, a_scale, b.values, b_scale, bi,
+                               block_m=block_m, block_n=block_n,
+                               block_k=block_k, out_dtype=out_dtype,
+                               interpret=interpret)
+
+
+def _tiled_matmul_padded(av, a_scale, bv, b_scale, bias, *, block_m, block_n,
+                         block_k, out_dtype, interpret):
+    """Legacy policy: zero-pad operands to block multiples, slice the result.
+
+    Exact in int8, but moves every operand through an HBM pad copy and the
+    output through a slice copy — ``benchmarks/partial_tile.py`` quantifies
+    the delta against the native path.
+    """
+    m, k = av.shape
+    _, n = bv.shape
     mp = round_up(m, block_m)
     np_ = round_up(n, block_n)
     kp = round_up(k, block_k) if block_k else round_up(k, MXU_DIM)
-    av = jnp.pad(a.values, ((0, mp - m), (0, kp - k)))
-    bv = jnp.pad(b.values, ((0, kp - k), (0, np_ - n)))
+    av = jnp.pad(av, ((0, mp - m), (0, kp - k)))
+    bv = jnp.pad(bv, ((0, kp - k), (0, np_ - n)))
     sa = jnp.pad(a_scale, ((0, mp - m), (0, 0)), constant_values=1.0)
     sb = jnp.pad(b_scale, ((0, 0), (0, np_ - n)), constant_values=1.0)
     bi = (jnp.pad(bias.reshape(1, -1).astype(jnp.float32),
                   ((0, 0), (0, np_ - n)))
           if bias is not None else None)
-
     out = tiled_matmul_kernel(av, sa, bv, sb, bi,
                               block_m=block_m, block_n=block_n,
                               block_k=block_k, out_dtype=out_dtype,
@@ -91,7 +122,8 @@ def quantized_matmul(x: jax.Array, w: QTensor,
     """Dynamic-activation-quant GEMM: quantize x per-row then tiled_matmul.
 
     This is the FPGAQuantizedLinear inner loop (paper §6.2): quantize input
-    activations to int8, offload the int8 GEMM, dequantize + bias.
+    activations to int8, offload the int8 GEMM, dequantize + bias.  Plan
+    selection routes through the GEMM dispatcher at trace time.
     """
     xq = quantize(x, channel_axes=(0,), bits=act_bits)
     return tiled_matmul(xq, w, bias, out_dtype=out_dtype, mode=mode)

@@ -39,7 +39,10 @@ _WHILE_RE = re.compile(
 _TRIP_RE = re.compile(r'known_trip_count"?\s*:?\s*\{"?n"?\s*:\s*"?(\d+)')
 _CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\-\.]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_FIRST_OPERAND_RE = re.compile(r"\(\s*%([\w\-\.]+)")
+# An operand inside dot(...) is either "%name" (older HLO) or
+# "f32[256,256]{1,0} %name" (typed operands, JAX >= 0.4.3x emits these).
+_FIRST_OPERAND_RE = re.compile(
+    r"\(\s*(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?\s+)?%([\w\-\.]+)")
 
 # Ops whose operands/results genuinely cross HBM on a TPU (pointwise chains
 # fuse into their producers/consumers and are intentionally NOT counted —
@@ -219,10 +222,16 @@ def analyze_hlo(hlo: str) -> HloCost:
                 res_elems, _ = _shape_elems_bytes(res_shape)
                 k = 1
                 cdm = _CONTRACT_RE.search(ln)
-                opm = _FIRST_OPERAND_RE.search(ln[ln.index("dot("):])
-                if cdm and opm:
-                    lhs_shape = tab.get(opm.group(1))
-                    dims = _shape_dims(lhs_shape) if lhs_shape else None
+                call = ln[ln.index("dot("):]
+                opm = _FIRST_OPERAND_RE.search(call)
+                if cdm:
+                    # lhs shape: prefer the inline typed-operand form
+                    # ("dot(f32[8,64,128]{2,1,0} %lhs, ...)"), falling back
+                    # to the SSA symbol table for untyped "dot(%lhs, ...)"
+                    dims = _shape_dims(call.split(" %", 1)[0][4:])
+                    if dims is None and opm:
+                        lhs_shape = tab.get(opm.group(1))
+                        dims = _shape_dims(lhs_shape) if lhs_shape else None
                     if dims is not None:
                         for c in (int(x) for x in cdm.group(1).split(",")
                                   if x.strip()):

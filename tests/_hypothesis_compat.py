@@ -1,0 +1,121 @@
+"""Graceful fallback when ``hypothesis`` is not installed.
+
+``requirements-dev.txt`` makes hypothesis a real dev dependency; CI installs
+it and gets genuine property-based search.  Containers without it (this
+repro image bakes its own toolchain and must not ``pip install``) would
+previously fail *collection* of every module importing hypothesis.  Instead
+of a blanket ``pytest.importorskip`` — which would silently drop the
+non-property tests in the same module — this shim provides a deterministic
+miniature of the ``given``/``strategies`` API: each strategy enumerates a
+small fixed set of boundary + seeded-random examples and ``given`` runs the
+test once per example tuple.  Far weaker than hypothesis, but the invariants
+still get exercised everywhere and collection never fails.
+
+Usage (drop-in for the common subset)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # deterministic shim
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 12
+
+    class _Strategy:
+        def __init__(self, gen):
+            self._gen = gen        # rng -> example
+
+        def examples(self, rng):
+            return [self._gen(rng) for _ in range(_N_EXAMPLES)]
+
+        def filter(self, pred):
+            def gen(rng):
+                for _ in range(1000):
+                    x = self._gen(rng)
+                    if pred(x):
+                        return x
+                raise ValueError("filter predicate too strict for shim")
+            return _Strategy(gen)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._gen(rng)))
+
+    class _StrategiesShim:
+        @staticmethod
+        def floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                   allow_infinity=False, width=64):
+            edges = [min_value, max_value, 0.0, 1.0, -1.0]
+            edges = [e for e in edges if min_value <= e <= max_value]
+
+            def gen(rng):
+                if edges and rng.random() < 0.4:
+                    return rng.choice(edges)
+                return rng.uniform(min_value, max_value)
+            return _Strategy(gen)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            edges = [min_value, max_value,
+                     (min_value + max_value) // 2]
+
+            def gen(rng):
+                if rng.random() < 0.4:
+                    return rng.choice(edges)
+                return rng.randint(min_value, max_value)
+            return _Strategy(gen)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def gen(rng):
+                size = rng.randint(min_size, max_size)
+                return [elem._gen(rng) for _ in range(size)]
+            return _Strategy(gen)
+
+    st = _StrategiesShim()
+
+    def given(*strategies, **kw_strategies):
+        def deco(test_fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)   # deterministic across runs
+                cols = [s.examples(rng) for s in strategies]
+                kcols = {k: s.examples(rng)
+                         for k, s in kw_strategies.items()}
+                for i in range(_N_EXAMPLES):
+                    row = [c[i] for c in cols]
+                    krow = {k: c[i] for k, c in kcols.items()}
+                    test_fn(*args, *row, **kwargs, **krow)
+            wrapper.__name__ = test_fn.__name__
+            wrapper.__doc__ = test_fn.__doc__
+            return wrapper
+        return deco
+
+    class settings:                                    # noqa: N801
+        """No-op stand-ins for the profile API used at module scope."""
+
+        def __init__(self, *a, **k):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(name, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(name):
+            pass
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,265 @@
+"""GEMM dispatcher: partial-tile parity, autotuner cache, plan invariants.
+
+Acceptance (ISSUE 1): ref vs pallas_interpret bitwise across a partial-tile
+sweep incl. the paper's 64-row panel; NO host-side jnp.pad of operands on
+the native Pallas path; autotuner cache round-trip; TilePlan VMEM budget
+property.
+"""
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.core import dispatch
+from repro.core.quantization import QTensor, quantize
+from repro.core.tiling import VMEM_BYTES, choose_plan
+from repro.kernels.fused_qkv.ops import fused_qkv
+from repro.kernels.tiled_matmul.ops import tiled_matmul
+
+RNG = np.random.default_rng(7)
+
+# every dim a non-multiple of 128 somewhere + the paper's shapes
+PARTIAL_SHAPES = [
+    (64, 768, 3072),      # paper FFN panel: M=64 (the 64-row token panel)
+    (64, 768, 768),       # paper attention projection
+    (100, 300, 513),      # partial in every dim
+    (61, 765, 3071),      # paper FFN, all dims fractional
+    (127, 129, 131),      # just off the MXU edge
+    (5, 7, 9),            # tiny sub-sublane
+    (1, 128, 130),        # degenerate M, partial N
+]
+
+
+def _quantized_pair(m, k, n):
+    a = quantize(jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32)),
+                 channel_axes=(0,))
+    b = quantize(jnp.asarray((RNG.normal(size=(k, n)) * 0.05)
+                             .astype(np.float32)), channel_axes=(1,))
+    return a, b
+
+
+@pytest.mark.parametrize("m,k,n", PARTIAL_SHAPES)
+def test_partial_tile_parity_bitwise(m, k, n):
+    a, b = _quantized_pair(m, k, n)
+    out_ref = tiled_matmul(a, b, out_dtype=jnp.float32, mode="ref")
+    out_pal = tiled_matmul(a, b, out_dtype=jnp.float32,
+                           mode="pallas_interpret")
+    assert out_pal.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_pal))
+
+
+@pytest.mark.parametrize("m,k,n,bk", [(33, 300, 65, 128), (40, 513, 70, 256),
+                                      (16, 257, 384, 128)])
+def test_ksplit_contraction_mask_bitwise(m, k, n, bk):
+    """K not a block_k multiple: the iota mask must zero the OOB K slab."""
+    a, b = _quantized_pair(m, k, n)
+    out_ref = tiled_matmul(a, b, out_dtype=jnp.float32, mode="ref")
+    out_pal = tiled_matmul(a, b, block_m=64, block_n=64, block_k=bk,
+                           out_dtype=jnp.float32, mode="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_pal))
+
+
+@pytest.mark.parametrize("m,kd,nq,nkv", [(100, 300, 513, 130),
+                                         (61, 765, 771, 257),
+                                         (7, 96, 100, 36)])
+def test_fused_qkv_partial_parity(m, kd, nq, nkv):
+    a = quantize(jnp.asarray(RNG.normal(size=(m, kd)).astype(np.float32)),
+                 channel_axes=(0,))
+    ws = [quantize(jnp.asarray((RNG.normal(size=(kd, n)) * 0.05)
+                               .astype(np.float32)), channel_axes=(1,))
+          for n in (nq, nkv, nkv)]
+    ref = fused_qkv(a, *ws, out_dtype=jnp.float32, mode="ref")
+    pal = fused_qkv(a, *ws, out_dtype=jnp.float32, mode="pallas_interpret")
+    for r, p in zip(ref, pal):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+
+def _jaxpr_has_pad(partial_policy: str) -> bool:
+    m, k, n = 61, 300, 513
+    av = jnp.zeros((m, k), jnp.int8)
+    sa = jnp.ones((m, 1), jnp.float32)
+    bv = jnp.zeros((k, n), jnp.int8)
+    sb = jnp.ones((1, n), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a_, sa_, b_, sb_: tiled_matmul(
+            QTensor(a_, sa_), QTensor(b_, sb_), out_dtype=jnp.float32,
+            mode="pallas_interpret", partial=partial_policy)
+    )(av, sa, bv, sb)
+    return re.search(r"\bpad\[", str(jaxpr)) is not None
+
+
+def test_native_path_has_no_host_pad():
+    """Acceptance: no host-side jnp.pad of operands in the pallas path."""
+    assert not _jaxpr_has_pad("native")
+
+
+def test_legacy_pad_path_still_pads():
+    """The benchmark's reference policy really does pad (delta is real)."""
+    assert _jaxpr_has_pad("pad")
+
+
+# ---------------------------------------------------------------------------
+# Autotuner cache
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def tune_cache(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv(dispatch.CACHE_ENV, str(path))
+    monkeypatch.setenv(dispatch.ITERS_ENV, "1")
+    dispatch.reset_cache_state()        # drop any in-process mirror
+    yield path
+    dispatch.reset_cache_state()
+
+
+def test_autotune_cache_roundtrip(tune_cache, monkeypatch):
+    m, k, n = 32, 64, 48
+    monkeypatch.setenv(dispatch.TUNE_ENV, "full")
+    tuned = dispatch.select_plan(m, k, n, out_dtype=jnp.float32,
+                                 interpret=True)
+    assert tune_cache.exists()
+    # measured entries are backend-qualified (cpu measurement → interpret)
+    entry = json.loads(tune_cache.read_text())[
+        f"{m}x{k}x{n}:float32:interpret"]
+    assert entry["block_m"] == tuned.block_m
+    assert entry["block_n"] == tuned.block_n
+    assert entry["us"] > 0
+
+    # cached mode must return the measured plan without re-measuring
+    monkeypatch.setenv(dispatch.TUNE_ENV, "cached")
+    dispatch.reset_cache_state()
+    hit = dispatch.select_plan(m, k, n, out_dtype=jnp.float32)
+    assert (hit.block_m, hit.block_n, hit.block_k) == \
+        (tuned.block_m, tuned.block_n, tuned.block_k)
+
+    # off mode ignores the cache entirely
+    monkeypatch.setenv(dispatch.TUNE_ENV, "off")
+    analytic = dispatch.select_plan(m, k, n, out_dtype=jnp.float32)
+    ref = choose_plan(m, k, n, out_bytes=4)
+    assert (analytic.block_m, analytic.block_n) == (ref.block_m, ref.block_n)
+
+
+def test_cached_mode_prefers_stored_plan(tune_cache, monkeypatch):
+    """A cache entry overrides the analytic pick (that's the whole point)."""
+    m, k, n = 256, 512, 384
+    monkeypatch.setenv(dispatch.TUNE_ENV, "cached")
+    tune_cache.write_text(json.dumps({
+        f"{m}x{k}x{n}:float32": {"block_m": 128, "block_n": 128,
+                                 "block_k": k}}))
+    plan = dispatch.select_plan(m, k, n, out_dtype=jnp.float32)
+    assert (plan.block_m, plan.block_n) == (128, 128)
+    analytic = choose_plan(m, k, n, out_bytes=4)
+    assert (analytic.block_m, analytic.block_n) != (128, 128)
+
+
+def test_corrupt_cache_falls_back_to_analytic(tune_cache, monkeypatch):
+    monkeypatch.setenv(dispatch.TUNE_ENV, "cached")
+    tune_cache.write_text("{not json")
+    plan = dispatch.select_plan(64, 768, 3072, out_dtype=jnp.float32)
+    ref = choose_plan(64, 768, 3072, out_bytes=4)
+    assert (plan.block_m, plan.block_n) == (ref.block_m, ref.block_n)
+
+
+def test_tuned_plan_parity(tune_cache, monkeypatch):
+    """Numerics are plan-independent: a tuned plan stays bitwise-exact."""
+    monkeypatch.setenv(dispatch.TUNE_ENV, "full")
+    m, k, n = 48, 96, 80
+    a, b = _quantized_pair(m, k, n)
+    out_ref = tiled_matmul(a, b, out_dtype=jnp.float32, mode="ref")
+    out_pal = tiled_matmul(a, b, out_dtype=jnp.float32,
+                           mode="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_pal))
+    assert tune_cache.exists()          # the run really went through tuning
+
+
+def test_cached_entry_from_other_backend_is_a_miss(tune_cache, monkeypatch):
+    """Interpret-tuned plans must not override the analytic model on TPU
+    (and vice versa): measured entries are keyed per backend, so another
+    backend's winner is simply not visible here."""
+    m, k, n = 256, 512, 384
+    monkeypatch.setenv(dispatch.TUNE_ENV, "cached")
+    tune_cache.write_text(json.dumps({
+        f"{m}x{k}x{n}:float32:tpu": {"block_m": 128, "block_n": 128,
+                                     "block_k": k, "backend": "tpu"}}))
+    plan = dispatch.select_plan(m, k, n, out_dtype=jnp.float32)  # cpu here
+    ref = choose_plan(m, k, n, out_bytes=4)
+    assert (plan.block_m, plan.block_n) == (ref.block_m, ref.block_n)
+
+
+def test_handshipped_entry_without_block_k_is_panel(tune_cache, monkeypatch):
+    """Unqualified hand-shipped entries may omit block_k (panel-resident)."""
+    m, k, n = 256, 512, 384
+    monkeypatch.setenv(dispatch.TUNE_ENV, "cached")
+    tune_cache.write_text(json.dumps({
+        f"{m}x{k}x{n}:float32": {"block_m": 128, "block_n": 128}}))
+    plan = dispatch.select_plan(m, k, n, out_dtype=jnp.float32)
+    assert (plan.block_m, plan.block_n) == (128, 128)
+    assert plan.k_steps == 1 and plan.block_k == k
+
+
+def test_oversized_cache_entry_rejected(tune_cache, monkeypatch):
+    """Entries beyond the half-VMEM planning budget fall back to analytic."""
+    m, k, n = 512, 65536, 512
+    monkeypatch.setenv(dispatch.TUNE_ENV, "cached")
+    tune_cache.write_text(json.dumps({
+        f"{m}x{k}x{n}:float32": {"block_m": 512, "block_n": 512,
+                                 "block_k": k}}))
+    plan = dispatch.select_plan(m, k, n, out_dtype=jnp.float32)
+    assert plan.fits_vmem(VMEM_BYTES // 2)
+    assert (plan.block_m, plan.block_n, plan.block_k) != (512, 512, k)
+
+
+def test_fused_blocks_revalidated_for_fused_footprint(tune_cache,
+                                                      monkeypatch):
+    """A K-split single-GEMM plan cannot leak into the panel-only fused
+    kernel: select_fused_blocks must return shapes whose *fused* footprint
+    (A panel + three double-buffered weight streams) fits the budget."""
+    m, k, n = 512, 28672, 4096
+    monkeypatch.setenv(dispatch.TUNE_ENV, "cached")
+    tune_cache.write_text(json.dumps({
+        f"{m}x{k}x{n}:bfloat16": {"block_m": 512, "block_n": 512,
+                                  "block_k": 256}}))
+    bm, bn = dispatch.select_fused_blocks(m, k, n, out_dtype=jnp.bfloat16)
+    assert dispatch._fused_qkv_footprint(bm, bn, k, 2) <= VMEM_BYTES // 2
+
+
+def test_invalid_tune_mode_rejected(monkeypatch):
+    monkeypatch.setenv(dispatch.TUNE_ENV, "sometimes")
+    with pytest.raises(ValueError):
+        dispatch.tune_mode()
+
+
+# ---------------------------------------------------------------------------
+# TilePlan / candidate invariants (VMEM budget property test)
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 4096), st.integers(1, 8192), st.integers(1, 8192))
+def test_candidates_fit_vmem_and_cover(m, k, n):
+    plans = dispatch.candidate_plans(m, k, n)
+    assert plans, (m, k, n)
+    for plan in plans:
+        assert plan.fits_vmem(VMEM_BYTES // 2), (plan, plan.vmem_footprint)
+        # ceil-grid coverage of the logical problem
+        grid = dispatch.grid_shape(m, n, plan)
+        assert grid[0] * plan.block_m >= m
+        assert grid[1] * plan.block_n >= n
+        assert plan.k_steps * plan.block_k >= k
+
+
+@given(st.integers(1, 2048), st.integers(1, 4096), st.integers(1, 4096))
+def test_select_plan_always_feasible(m, k, n):
+    plan = dispatch.select_plan(m, k, n, out_dtype=jnp.bfloat16)
+    assert plan.fits_vmem()
+    assert dispatch.pad_overhead(m, k, n, plan) >= 0.0
+
+
+def test_pad_overhead_paper_panel():
+    """The paper's (64,768)x(768,3072) FFN GEMM: zero-pad policy waste."""
+    plan = choose_plan(64, 768, 3072)
+    # block_m is sublane-aligned to 64 for the small panel, so the legacy
+    # policy wasted no M padding here — but a fractional variant does:
+    assert dispatch.pad_overhead(64, 768, 3072, plan) == 0.0
+    plan61 = choose_plan(61, 765, 3071)
+    assert dispatch.pad_overhead(61, 765, 3071, plan61) > 0.0

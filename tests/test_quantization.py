@@ -1,8 +1,13 @@
-"""Property-based tests (hypothesis) for quantization + tiling invariants."""
+"""Property-based tests (hypothesis) for quantization + tiling invariants.
+
+Runs under real hypothesis when installed (requirements-dev.txt / CI);
+otherwise _hypothesis_compat substitutes a deterministic example sweep so
+the module collects and the invariants still run everywhere.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.quantization import (Calibrator, dequantize, fake_quantize,
                                      qmax_for_bits, quantize)

@@ -110,8 +110,9 @@ def test_multi_device_end_to_end():
                                            make_param_rules,
                                            make_activation_rules)
         cfg = get_smoke_config("qwen2_5_3b").replace(dtype="float32")
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        # axis_types= (and jax.sharding.AxisType) only exist on jax >= 0.5;
+        # the default (auto) axis semantics are what we want on 0.4.x too.
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         params = init_model(jax.random.PRNGKey(0), cfg)
         opt = AdamW(learning_rate=1e-3)
         state = TrainState.create(params, opt)
@@ -138,6 +139,14 @@ def test_multi_device_end_to_end():
         d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
                          sharded_state.params, single_state.params)
         assert max(jax.tree.leaves(d)) < 1e-4
+        # the updated params must actually BE sharded (not an 8-way
+        # replicated fallback): at least one leaf spans all devices with a
+        # non-trivial partition
+        assert jax.device_count() == 8
+        shardings = [l.sharding for l in jax.tree.leaves(
+            sharded_state.params)]
+        assert any(not s.is_fully_replicated for s in shardings), \
+            "no parameter leaf is partitioned"
         print("MULTIDEVICE_OK")
     """)
     res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
