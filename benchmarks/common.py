@@ -7,13 +7,63 @@ and the dry-run roofline terms (EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import math
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.core.tiling import (HBM_BW, PEAK_BF16_FLOPS, PEAK_INT8_OPS,
-                               TilePlan)
+from repro.core.tiling import PEAK_INT8_OPS, TilePlan
+
+
+def bench_options(argv=None, description: str | None = None):
+    """Shared CLI for benchmark modules: ``--smoke`` (reduced shapes /
+    iterations for the CI benchmark-smoke job) and ``--json PATH`` (append
+    this run's tables to a JSON artifact, e.g. ``BENCH_ci.json``)."""
+    p = argparse.ArgumentParser(description=description)
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced shapes/iters for CI smoke tracking")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="append result tables to this JSON file")
+    return p.parse_args(argv)
+
+
+def _jsonable(v):
+    if isinstance(v, float) and not math.isfinite(v):
+        return None                # NaN/inf are not portable JSON
+    if isinstance(v, (np.floating, np.integer)):
+        return _jsonable(v.item())
+    return v
+
+
+def write_json(path: str, sections: dict[str, list[dict]]) -> None:
+    """Merge ``sections`` ({name: rows}) into the JSON artifact at ``path``.
+
+    Read-merge-write so several benchmark modules can append to one
+    artifact (the CI smoke job runs them back to back).
+    """
+    payload: dict = {}
+    try:
+        with open(path) as f:
+            existing = json.load(f)
+        if isinstance(existing, dict):
+            payload = existing
+    except (OSError, ValueError):
+        pass
+    payload.setdefault("meta", {
+        "backend": jax.default_backend(),
+        "note": "host wall-times are ordering-only; see benchmarks/common.py",
+    })
+    for name, rows in sections.items():
+        payload[name] = [{c: _jsonable(v) for c, v in r.items()}
+                         for r in rows]
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
 
 
 def timeit(fn, *args, iters: int = 5, warmup: int = 2):

@@ -17,19 +17,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import gflops, print_table, timeit, v5e_projection
+from benchmarks.common import (bench_options, gflops, print_table, timeit,
+                               v5e_projection, write_json)
 from repro.core.quantization import quantize
 from repro.core.tiling import choose_plan
 from repro.kernels.tiled_matmul.ops import tiled_matmul
 from repro.kernels.tiled_matmul.ref import matmul_f32_oracle
 
 SHAPES = [(64, 768, 768), (64, 768, 3072)]
+SMOKE_SHAPES = [(64, 768, 768)]        # CI smoke: one paper shape
 
 
-def run() -> list[dict]:
+def run(shapes=None) -> list[dict]:
     rows = []
     rng = np.random.default_rng(0)
-    for (m, k, n) in SHAPES:
+    for (m, k, n) in (shapes or SHAPES):
         a = rng.normal(size=(m, k)).astype(np.float32)
         b = (rng.normal(size=(k, n)) * 0.05).astype(np.float32)
         aj, bj = jnp.asarray(a), jnp.asarray(b)
@@ -94,10 +96,14 @@ def _naive_matmul_time(a, b, budget_s: float = 2.0):
     return dt * (m / rows_timed)
 
 
-def main():
-    print_table("Table 2 analogue — GEMM on DistilBERT shapes", run())
+def main(argv=None):
+    opts = bench_options(argv, description=__doc__)
+    rows = run(SMOKE_SHAPES if opts.smoke else SHAPES)
+    print_table("Table 2 analogue — GEMM on DistilBERT shapes", rows)
     print("paper reference (KV260): FPGA 3.12 GFLOP/s compute, "
           "2.85 end-to-end; 7.0x vs ARM PyTorch, 214x vs NumPy")
+    if opts.json:
+        write_json(opts.json, {"gemm_paper_shapes": rows})
 
 
 if __name__ == "__main__":

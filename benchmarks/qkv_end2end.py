@@ -8,7 +8,6 @@ A/B: full fp32 forward vs the w8a8-projection forward of the same model
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import print_table, timeit
 from repro.configs import get_smoke_config

@@ -16,7 +16,7 @@ import json
 import os
 import tempfile
 
-from benchmarks.common import print_table
+from benchmarks.common import bench_options, print_table, write_json
 from repro.core.tiling import MXU_DIM, TilePlan, choose_plan
 
 SWEEP_SHAPES = [(64, 768, 3072), (4096, 4608, 36864), (256, 12288, 28672)]
@@ -26,10 +26,15 @@ BLOCKS = [32, 64, 128, 256, 512]
 # schedule space (panel block shapes) is still non-trivial
 TUNE_SHAPE = (160, 300, 200)
 
+# fused QKV (M, K, Nq, Nkv): the paper's 64-row DistilBERT panel (MHA,
+# Nq == Nkv) plus a GQA shape with K large enough that K-split candidates
+# enter the race — REPRO_TUNE=full picks the schedule per shape.
+FUSED_TUNE_SHAPES = [(64, 768, 768, 768), (48, 2048, 256, 64)]
 
-def run() -> list[dict]:
+
+def run(shapes=None) -> list[dict]:
     rows = []
-    for (m, k, n) in SWEEP_SHAPES:
+    for (m, k, n) in (shapes or SWEEP_SHAPES):
         for b in BLOCKS:
             plan = TilePlan(m, k, n, block_m=min(b, max(m, 1)),
                             block_n=b, block_k=k)
@@ -55,7 +60,7 @@ def run() -> list[dict]:
     return rows
 
 
-def run_autotune() -> list[dict]:
+def run_autotune(smoke: bool = False) -> list[dict]:
     """Measure candidates for TUNE_SHAPE and exercise the cache round trip."""
     import jax.numpy as jnp
 
@@ -76,7 +81,8 @@ def run_autotune() -> list[dict]:
             # never disagree
             measured: list = []
             tuned = dispatch.tune(m, k, n, out_dtype=jnp.float32,
-                                  interpret=True, iters=2, max_candidates=4,
+                                  interpret=True, iters=1 if smoke else 2,
+                                  max_candidates=3 if smoke else 4,
                                   results=measured)
             for plan, t in measured:
                 rows.append({"shape": f"{m}x{k}x{n}",
@@ -89,7 +95,10 @@ def run_autotune() -> list[dict]:
             entry = json.load(open(cache))[f"{m}x{k}x{n}:float32:interpret"]
             os.environ[dispatch.TUNE_ENV] = "cached"
             dispatch.reset_cache_state()
-            hit = dispatch.select_plan(m, k, n, out_dtype=jnp.float32)
+            # interpret=True so the lookup resolves to the same backend
+            # qualifier the tuner stored under, also on a real-TPU host
+            hit = dispatch.select_plan(m, k, n, out_dtype=jnp.float32,
+                                       interpret=True)
             rows.append({"shape": f"{m}x{k}x{n}",
                          "block": f"TUNED {tuned.block_m}x{tuned.block_n}"
                          + (" [cache hit]"
@@ -110,16 +119,91 @@ def run_autotune() -> list[dict]:
     return rows
 
 
-def main():
-    rows = run()
-    print_table("Tile-size DSE (paper §5, TPU blocks vs MXU/VMEM)", rows)
+def run_fused_autotune(smoke: bool = False) -> list[dict]:
+    """REPRO_TUNE=full over fused QKV shapes: the tuner measures BOTH
+    schedules (panel-resident vs K-split) per (M, K, Nq, Nkv) and the
+    extended cache key hits on re-run (the acceptance demonstration)."""
+    import jax.numpy as jnp
+
+    from repro.core import dispatch
+
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = os.path.join(tmp, "tune.json")
+        prev = {var: os.environ.get(var)
+                for var in (dispatch.CACHE_ENV, dispatch.TUNE_ENV)}
+        os.environ[dispatch.CACHE_ENV] = cache
+        os.environ[dispatch.TUNE_ENV] = "full"
+        dispatch.reset_cache_state()
+        try:
+            shapes = FUSED_TUNE_SHAPES[:1] if smoke else FUSED_TUNE_SHAPES
+            for (m, k, nq, nkv) in shapes:
+                measured: list = []
+                tuned = dispatch.tune_fused(
+                    m, k, nq, nkv, out_dtype=jnp.float32, interpret=True,
+                    iters=1 if smoke else 2,
+                    max_candidates=3 if smoke else 5, results=measured)
+                scheds = {p.schedule.value for p, _ in measured}
+                for plan, t in measured:
+                    rows.append({
+                        "shape": f"{m}x{k}x{nq}+{nkv}",
+                        "schedule": plan.schedule.value,
+                        "block": f"{plan.block_m}x{plan.block_n}"
+                        + (f" k{plan.block_k}"
+                           if plan.schedule.value == "k_split" else ""),
+                        "measured_us": t * 1e6,
+                        "schedules_raced": len(scheds),
+                    })
+                # cached mode must return the winner without re-measuring;
+                # interpret=True keeps the backend qualifier aligned with
+                # what the tuner stored, also on a real-TPU host
+                os.environ[dispatch.TUNE_ENV] = "cached"
+                dispatch.reset_cache_state()
+                hit = dispatch.select_fused_plan(m, k, nq, nkv,
+                                                 out_dtype=jnp.float32,
+                                                 interpret=True)
+                rows.append({
+                    "shape": f"{m}x{k}x{nq}+{nkv}",
+                    "schedule": f"TUNED {tuned.schedule.value}",
+                    "block": f"{tuned.block_m}x{tuned.block_n}"
+                    + (f" k{tuned.block_k}"
+                       if tuned.schedule.value == "k_split" else "")
+                    + (" [cache hit]" if hit == tuned else " [CACHE MISS!]"),
+                    "measured_us": min(t for _, t in measured) * 1e6,
+                    "schedules_raced": len(scheds),
+                })
+                os.environ[dispatch.TUNE_ENV] = "full"
+                dispatch.reset_cache_state()
+        finally:
+            for var, val in prev.items():
+                if val is None:
+                    os.environ.pop(var, None)
+                else:
+                    os.environ[var] = val
+            dispatch.reset_cache_state()
+    return rows
+
+
+def main(argv=None):
+    opts = bench_options(argv, description=__doc__)
+    sweep = run(SWEEP_SHAPES[:1] if opts.smoke else SWEEP_SHAPES)
+    print_table("Tile-size DSE (paper §5, TPU blocks vs MXU/VMEM)", sweep)
     print("paper reference: T=16 under-fills compute, T=64 fails timing; "
           "T=32 optimal. TPU analogue: 128-multiple blocks fill the MXU; "
           "the chooser prefers the largest panel-resident block that fits "
           "VMEM.")
+    tune_rows = run_autotune(smoke=opts.smoke)
     print_table("Autotuner (REPRO_TUNE=full): measured candidates + cache "
                 "round trip (interpret-mode timings, ordering only)",
-                run_autotune())
+                tune_rows)
+    fused_rows = run_fused_autotune(smoke=opts.smoke)
+    print_table("Fused-QKV autotuner: schedule (panel vs k_split) picked "
+                "per (M,K,Nq+Nkv), extended-key cache hit on re-run",
+                fused_rows)
+    if opts.json:
+        write_json(opts.json, {"tile_sweep": sweep,
+                               "autotune": tune_rows,
+                               "fused_autotune": fused_rows})
 
 
 if __name__ == "__main__":

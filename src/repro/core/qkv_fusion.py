@@ -6,6 +6,13 @@ once and contracted against Wq, Wk, Wv inside a single kernel dispatch, so A
 crosses the HBM→VMEM boundary once (FPGA: DDR→BRAM once, reused via the
 update_A flag).  In 'none'/'w8' modes the analogous saving comes from a
 single concatenated GEMM that XLA fuses (one pass over x).
+
+The w8a8 path routes through the schedule-aware dispatcher
+(``core.dispatch.select_fused_plan``): the fused shape (M, K, Nq, Nkv) —
+including the GQA output split — keys the tune cache, and the returned plan
+carries a ``Schedule`` (panel-resident vs K-split contraction), so attention
+layers with huge hidden dims no longer silently fall back to an
+under-filled panel.
 """
 from __future__ import annotations
 

@@ -16,6 +16,10 @@ modes, selectable per-matmul-family from the arch config:
                 scales, routed through the tiled-GEMM kernel via the GEMM
                 dispatcher (``core.dispatch``: autotuned block shapes under
                 REPRO_TUNE, native partial tiles — no host-side padding).
+                Plans are schedule-aware (``dispatch.Schedule``): the
+                dispatcher picks panel-resident (block_k == K) or K-split
+                contraction per shape, empirically when the tune cache has
+                a measured entry.
 
 Parameters are stored as master floats for training; ``quantize_params``
 converts a pytree for serving (the paper's offline static quantization).

@@ -48,6 +48,14 @@ class TilePlan:
     def k_steps(self) -> int:
         return ceil_div(self.k, self.block_k)
 
+    @property
+    def schedule(self) -> str:
+        """Contraction schedule this plan implies — ``"panel"`` (block_k
+        spans K, the paper's persistent-A schedule) or ``"k_split"``.
+        String-valued so this module stays import-free of ``core.dispatch``;
+        compares equal to the ``dispatch.Schedule`` str-enum."""
+        return "panel" if self.k_steps == 1 else "k_split"
+
     # -- level-1 (VMEM) footprint ------------------------------------------
     @property
     def vmem_footprint(self) -> int:

@@ -1,16 +1,22 @@
 """Jit'd wrapper for the fused QKV projection (update_A analogue).
 
-Block shapes route through the GEMM dispatcher (``core.dispatch``) using the
-Q projection's (M, K, Nq) as the tuning key — Q has the most column blocks,
-so its sweep dominates the schedule.  Partial tiles are handled natively by
-the kernel (no host-side ``jnp.pad``), the same policy as ``tiled_matmul``.
+Plan selection routes through the schedule-aware GEMM dispatcher
+(``core.dispatch.select_fused_plan``) keyed on the full fused shape
+(M, K, Nq, Nkv) — the (Nq, Nkv) output split is part of the tune key because
+GQA changes the K/V sweep and with it the winning schedule.  The dispatcher
+returns blocks *and* a ``Schedule``: ``panel`` keeps the activation panel
+resident across the whole contraction (the paper's ``update_A``), ``k_split``
+streams K slabs through carried accumulators.  Both schedules share one
+kernel launch path and are bitwise identical to the reference; partial tiles
+are handled natively (no host-side ``jnp.pad``), the same policy as
+``tiled_matmul``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dispatch import select_fused_blocks
+from repro.core.dispatch import Schedule, select_fused_plan
 from repro.core.quantization import QTensor
 from repro.kernels.fused_qkv import ref as _ref
 from repro.kernels.fused_qkv.kernel import fused_qkv_kernel
@@ -21,10 +27,13 @@ __all__ = ["fused_qkv"]
 
 def fused_qkv(a: QTensor, wq: QTensor, wk: QTensor, wv: QTensor, *,
               block_m: int | None = None, block_n: int | None = None,
+              block_k: int | None = None,
               out_dtype=jnp.bfloat16, mode: str | None = None):
     """(q, k, v) = dequant(A_q @ [Wq|Wk|Wv]) with A loaded once.
 
     a: (M, K) QTensor, per-row scale.  w*: (K, N*) QTensors, per-col scales.
+    ``block_k``: None lets the dispatcher pick the schedule; an explicit
+    value < K forces the K-split schedule (tests/benchmarks).
     """
     mode = mode or kernel_mode()
     m, k = a.values.shape
@@ -40,11 +49,14 @@ def fused_qkv(a: QTensor, wq: QTensor, wk: QTensor, wv: QTensor, *,
 
     interpret = mode == "pallas_interpret"
     if block_m is None or block_n is None:
-        bm, bn = select_fused_blocks(m, k, nq, out_dtype=out_dtype,
-                                     interpret=interpret)
-        block_m = block_m or bm
-        block_n = block_n or bn
+        plan = select_fused_plan(m, k, nq, nkv, out_dtype=out_dtype,
+                                 interpret=interpret)
+        block_m = block_m or plan.block_m
+        block_n = block_n or plan.block_n
+        if block_k is None and plan.schedule is Schedule.K_SPLIT:
+            block_k = plan.block_k
     return fused_qkv_kernel(a.values, a_scale, wq.values, sq,
                             wk.values, sk, wv.values, sv,
                             block_m=block_m, block_n=block_n,
+                            block_k=block_k,
                             out_dtype=out_dtype, interpret=interpret)

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.quantized_linear import apply_linear, init_linear
 from repro.launch.sharding import shard

@@ -18,9 +18,6 @@ Cache convention (decode):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-from repro.checkpoint.store import latest_step, restore_checkpoint
+from repro.checkpoint.store import latest_step
 
 
 class InjectedFailure(RuntimeError):

@@ -9,7 +9,6 @@ the distributed level; see runtime/compression.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -4,7 +4,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Iterable
 
-import jax
 import numpy as np
 
 from repro.checkpoint.store import (AsyncCheckpointer, restore_checkpoint)

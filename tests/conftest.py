@@ -8,3 +8,22 @@ os.environ.setdefault("REPRO_KERNELS", "ref")
 # benches must see 1 device (multi-device sharding tests use subprocesses).
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+import pytest
+
+
+@pytest.fixture
+def tune_cache(tmp_path, monkeypatch):
+    """Isolated autotuner cache: private file, 1 measurement iter, shipped
+    seed table disabled (it covers the paper shapes several tests use to
+    assert analytic fallback).  Shared by test_dispatch / test_fused_schedule."""
+    from repro.core import dispatch
+
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv(dispatch.CACHE_ENV, str(path))
+    monkeypatch.setenv(dispatch.ITERS_ENV, "1")
+    monkeypatch.setenv(dispatch.SEED_ENV, "0")
+    dispatch.reset_cache_state()        # drop any in-process mirror
+    yield path
+    dispatch.reset_cache_state()

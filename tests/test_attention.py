@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.models.attention import _attend_blockwise, _attend_dense
-from repro.models.config import ModelConfig
 from repro.models.ssm import ssd_chunked
 
 RNG = np.random.default_rng(7)
@@ -36,7 +35,6 @@ def test_blockwise_matches_dense(causal, window, is_local, cap):
 
 def test_blockwise_chunk_size_invariance():
     q, k, v = _qkv(s=64, t=64)
-    pos = jnp.arange(64)
     outs = []
     for qc, kc in [(8, 8), (16, 32), (64, 64), (32, 8)]:
         outs.append(np.asarray(_attend_blockwise(

@@ -105,14 +105,8 @@ def test_legacy_pad_path_still_pads():
 # ---------------------------------------------------------------------------
 # Autotuner cache
 # ---------------------------------------------------------------------------
-@pytest.fixture
-def tune_cache(tmp_path, monkeypatch):
-    path = tmp_path / "tune.json"
-    monkeypatch.setenv(dispatch.CACHE_ENV, str(path))
-    monkeypatch.setenv(dispatch.ITERS_ENV, "1")
-    dispatch.reset_cache_state()        # drop any in-process mirror
-    yield path
-    dispatch.reset_cache_state()
+# the isolated-cache ``tune_cache`` fixture lives in conftest.py (shared
+# with test_fused_schedule.py)
 
 
 def test_autotune_cache_roundtrip(tune_cache, monkeypatch):
