@@ -1,0 +1,86 @@
+"""Flash-attention engine: block-sparse KV schedule counters + ms/layer.
+
+Two views per shape:
+
+  * **KV blocks touched** — ``flash_schedule`` counts the KV blocks the
+    block-sparse sweep actually streams from HBM versus the dense
+    rectangular sweep (``num_q × num_kv``).  These are exact, analytic,
+    and hardware-independent: they ARE the launched grid, so they hold on
+    a real TPU even though this container times on CPU.
+  * **ms/layer** — host wall time of one attention layer's flash call
+    (ordering-only, see benchmarks/common.py) on the runnable subset.
+
+Run: ``python -m benchmarks.flash_attention [--smoke] [--json PATH]``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_options, print_table, timeit, write_json
+from repro.kernels.flash_attention.kernel import flash_schedule
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.tiled_matmul.ops import kernel_mode
+
+# name, b, s, h, kh, d, window  (paper-adjacent serving shapes)
+SHAPES = [
+    ("gemma2_27b_global_4k", 1, 4096, 32, 16, 128, None),
+    ("gemma2_27b_local_8k", 1, 8192, 32, 16, 128, 4096),
+    ("mistral_large_local_32k", 1, 32768, 96, 8, 128, 4096),
+    ("qwen2_5_3b_causal_8k", 1, 8192, 16, 2, 128, None),
+]
+SMOKE_SHAPES = [
+    ("causal_512", 1, 512, 4, 2, 64, None),
+    ("local_w128_512", 1, 512, 4, 2, 64, 128),
+    ("local_w128_partial_300", 1, 300, 4, 2, 64, 128),
+]
+CHUNKS = (2048, 1024)            # ModelConfig defaults (attn_chunk_q/kv)
+SMOKE_CHUNKS = (128, 64)
+
+# host-dense-oracle timing is O(S²·H): keep it to shapes a CI runner can do
+TIME_MAX_ELEMS = 4 * 512 * 512 * 64
+
+
+def main(argv=None) -> None:
+    args = bench_options(argv, description=__doc__)
+    # small shapes keep small chunks (they carry the timings); the
+    # paper-scale shapes use the ModelConfig default chunks (counters only)
+    groups = [(SMOKE_SHAPES, SMOKE_CHUNKS)]
+    if not args.smoke:
+        groups.append((SHAPES, CHUNKS))
+
+    jobs = [(shape, chunks) for shapes, chunks in groups for shape in shapes]
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for (name, b, s, h, kh, d, window), (qc, kc) in jobs:
+        sc = flash_schedule(s, s, q_chunk=min(qc, s), kv_chunk=min(kc, s),
+                            causal=True, window=window)
+        row = {
+            "shape": name, "S": s, "H": h, "KH": kh, "window": window,
+            # the timing below runs whatever backend is live (on CI/CPU the
+            # ref oracle, not the kernel) — label it so the artifact says so
+            "mode": kernel_mode(),
+            "kv_blocks_dense": sc.blocks_dense,
+            "kv_blocks_sparse": sc.blocks_touched,
+            "streamed_frac": sc.blocks_touched / sc.blocks_dense,
+            "max_kv_steps": sc.max_kv_steps,
+            "ms_per_layer": None,
+        }
+        if b * h * s * s * d <= TIME_MAX_ELEMS * 16:
+            q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+            k = jnp.asarray(rng.normal(size=(b, s, kh, d)).astype(np.float32))
+            v = jnp.asarray(rng.normal(size=(b, s, kh, d)).astype(np.float32))
+            sec, _ = timeit(lambda: flash_attention(
+                q, k, v, causal=True, window=window,
+                q_chunk=qc, kv_chunk=kc), iters=3, warmup=1)
+            row["ms_per_layer"] = sec * 1e3
+        rows.append(row)
+
+    print_table("flash-attention block-sparse schedule", rows)
+    if args.json:
+        write_json(args.json, {"flash_attention": rows})
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@
   qkv_end2end       — §6.2(2) (DistilBERT QKV-offload scenario)
   partial_tile      — §5 (fractional-tile overhead)
   persistence       — §4.2 (update_A amortization via fused QKV)
+  flash_attention   — beyond-paper: block-sparse KV schedule counters
 
 Host wall-times are ordering-only (no TPU in this container); the graded
 performance numbers are the dry-run roofline terms in EXPERIMENTS.md.
@@ -24,11 +25,21 @@ MODULES = [
     "qkv_end2end",
     "partial_tile",
     "persistence",
+    "flash_attention",
 ]
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    rest = sys.argv[1:]
+    only = None
+    if rest and not rest[0].startswith("-"):
+        only = rest.pop(0)
+        if only not in MODULES:
+            sys.exit(f"unknown benchmark module {only!r}; "
+                     f"choose from {', '.join(MODULES)}")
+    # strip the selector but forward flags (--smoke/--json) to the modules'
+    # own argparse (benchmarks.common.bench_options)
+    sys.argv = sys.argv[:1] + rest
     for name in MODULES:
         if only and only != name:
             continue

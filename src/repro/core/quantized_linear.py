@@ -54,6 +54,12 @@ def init_linear(key: jax.Array, in_dim: int, out_dim: int, *,
     return params
 
 
+def weight_channel_axes(w: jax.Array) -> tuple[int, ...]:
+    """Per-output-channel scale axes, stack-aware: (K, N) → (1,);
+    scan-stacked (L, K, N) → (0, 2) — per (layer, out-channel)."""
+    return tuple(range(w.ndim - 2)) + (w.ndim - 1,)
+
+
 def quantize_linear(params: Params, bits: int = 8) -> Params:
     """Offline weight quantization (per output channel), keeps bias f32.
 
@@ -62,9 +68,8 @@ def quantize_linear(params: Params, bits: int = 8) -> Params:
     ``lax.scan`` yields exactly the single-layer QTensor.
     """
     w = params["w"]
-    stack_axes = tuple(range(w.ndim - 2))          # leading stack dims
-    channel_axes = stack_axes + (w.ndim - 1,)
-    out: Params = {"w_q": quantize(w, channel_axes=channel_axes, bits=bits)}
+    out: Params = {"w_q": quantize(w, channel_axes=weight_channel_axes(w),
+                                   bits=bits)}
     if "b" in params:
         out["b"] = params["b"].astype(jnp.float32)
     return out
@@ -73,6 +78,26 @@ def quantize_linear(params: Params, bits: int = 8) -> Params:
 def _flatten_leading(x: jax.Array):
     lead = x.shape[:-1]
     return x.reshape(-1, x.shape[-1]), lead
+
+
+def _matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (..., K) @ w (K, N) — or batched per layer when w is a scan stack
+    (L, K, N) against x (L, ..., K).  Rank/shape-strict: a stacked w with
+    an x that forgot its layer dim must raise, not broadcast."""
+    if w.ndim == 2:
+        return jnp.einsum("...k,kn->...n", x, w)
+    assert w.ndim == 3 and x.ndim >= 3 and x.shape[0] == w.shape[0], \
+        (x.shape, w.shape)
+    return jnp.einsum("l...k,lkn->l...n", x, w)
+
+
+def _add_bias(y: jax.Array, bias: jax.Array | None) -> jax.Array:
+    if bias is None:
+        return y
+    if bias.ndim > 1:       # stacked (L, N): layer axis aligns to y's axis 0
+        bias = bias.reshape(bias.shape[0], *(1,) * (y.ndim - 2),
+                            bias.shape[-1])
+    return y + bias.astype(y.dtype)
 
 
 def apply_linear(params: Params, x: jax.Array, *,
@@ -90,20 +115,23 @@ def apply_linear(params: Params, x: jax.Array, *,
 
     if mode == "none":
         w = params["w"]
-        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
-        if bias is not None:
-            y = y + bias.astype(y.dtype)
+        y = _matmul(x, w.astype(x.dtype))
+        y = _add_bias(y, bias)
         return y.astype(out_dtype)
 
+    # On-the-fly quantization must use the same stack-aware channel axes as
+    # quantize_linear: (1,) on a stacked (L, K, N) weight would silently
+    # compute per-K-row scales reduced over the layer dim.
     wq: QTensor = (params["w_q"] if "w_q" in params
-                   else quantize(params["w"], channel_axes=(1,)))
+                   else quantize(params["w"],
+                                 channel_axes=weight_channel_axes(
+                                     params["w"])))
 
     if mode == "w8":
         # Weight-only: dequant on the fly, bf16 MXU GEMM.
         w = wq.dequantize(x.dtype)
-        y = jnp.einsum("...k,kn->...n", x, w)
-        if bias is not None:
-            y = y + bias.astype(y.dtype)
+        y = _matmul(x, w)
+        y = _add_bias(y, bias)
         return y.astype(out_dtype)
 
     # w8a8 — the paper's path.

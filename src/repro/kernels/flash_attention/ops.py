@@ -1,8 +1,14 @@
-"""Jit'd wrapper for the flash-attention kernel with GQA + dispatch."""
+"""Jit'd wrapper for the flash-attention kernel with GQA + dispatch.
+
+GQA is *native*: k/v keep their true KV head count end to end — the
+wrapper only transposes (B, T, KH, D) → the kernel's (B, KH, T, D)
+layout, and the kernel's BlockSpec index maps broadcast each KV head
+across its query group, so the KV tensor is never repeated
+group-count× in HBM.
+"""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention import ref as _ref
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
@@ -13,31 +19,33 @@ __all__ = ["flash_attention"]
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: float | None = None, causal: bool = True,
+                    window: int | None = None,
                     softcap: float | None = None,
                     q_chunk: int = 256, kv_chunk: int = 256,
                     mode: str | None = None) -> jax.Array:
     """Multi-head attention, (B, S, H, D) q with (B, T, KH, D) kv (GQA).
 
-    Returns (B, S, H, D).  KV heads are broadcast across query groups.
+    Returns (B, S, H, D).  KV heads are broadcast across query groups
+    inside the kernel (index-map broadcast, no HBM repeat).  ``window``
+    applies a sliding-window mask (k > q - window) with a block-sparse KV
+    sweep; S/T may be arbitrary (native partial chunks).
     """
     mode = mode or kernel_mode()
     b, s, h, d = q.shape
-    t, kh = k.shape[1], k.shape[2]
-    g = h // kh
+    kh = k.shape[2]
+    assert h % kh == 0, (h, kh)
     scale = scale if scale is not None else d ** -0.5
 
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    k_rep = jnp.repeat(k, g, axis=2) if g > 1 else k
-    v_rep = jnp.repeat(v, g, axis=2) if g > 1 else v
-    kf = k_rep.transpose(0, 2, 1, 3).reshape(b * h, t, d)
-    vf = v_rep.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    qh = q.transpose(0, 2, 1, 3)            # (b, h, s, d)
+    kh_ = k.transpose(0, 2, 1, 3)           # (b, kh, t, d)
+    vh_ = v.transpose(0, 2, 1, 3)
 
     if mode == "ref":
-        o = _ref.attention_ref(qf, kf, vf, scale=scale, causal=causal,
-                               softcap=softcap)
+        o = _ref.attention_ref(qh, kh_, vh_, scale=scale, causal=causal,
+                               window=window, softcap=softcap)
     else:
         o = flash_attention_kernel(
-            qf, kf, vf, scale=scale, causal=causal, softcap=softcap,
-            q_chunk=q_chunk, kv_chunk=kv_chunk,
+            qh, kh_, vh_, scale=scale, causal=causal, window=window,
+            softcap=softcap, q_chunk=q_chunk, kv_chunk=kv_chunk,
             interpret=(mode == "pallas_interpret"))
-    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return o.transpose(0, 2, 1, 3)

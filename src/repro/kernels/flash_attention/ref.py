@@ -1,23 +1,44 @@
-"""Pure-jnp oracle for the flash-attention kernel: dense softmax attention."""
+"""Pure-jnp oracle for the flash-attention kernel: dense softmax attention.
+
+GQA-native like the kernel: q (B, H, S, D) against k/v (B, KH, T, D) with
+KV broadcast across the H // KH query groups by reshape — no materialized
+``jnp.repeat``.  Supports the kernel's full mask structure (causal,
+sliding window) so every schedule has a dense oracle.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 NEG_INF = -2.3819763e38
 
 
-def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   scale: float, causal: bool = True,
-                  softcap: float | None = None) -> jax.Array:
-    """q (N, S, D); k, v (N, T, D) → (N, S, D).  f32 softmax."""
-    s = jnp.einsum("nsd,ntd->nst", q, k,
+                  window: int | None = None,
+                  softcap: float | None = None) -> jnp.ndarray:
+    """q (B, H, S, D); k, v (B, KH, T, D) → (B, H, S, D).  f32 softmax."""
+    b, h, s_len, d = q.shape
+    kh, t_len = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, s_len, d)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k,
                    preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    if causal:
-        sq, tk = q.shape[1], k.shape[1]
-        mask = jnp.arange(sq)[:, None] >= jnp.arange(tk)[None, :]
-        s = jnp.where(mask[None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("nst,ntd->nsd", p.astype(v.dtype), v)
+    if causal or window is not None:
+        sq = jnp.arange(s_len)[:, None]
+        tk = jnp.arange(t_len)[None, :]
+        mask = jnp.full((s_len, t_len), True)
+        if causal:
+            mask &= tk <= sq
+        if window is not None:
+            mask &= tk > sq - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    # normalize like the kernel (0 output for all-masked rows, not uniform)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    if causal or window is not None:
+        p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-37)
+    o = jnp.einsum("bkgst,bktd->bkgsd", (p / l).astype(v.dtype), v)
+    return o.reshape(b, h, s_len, d)

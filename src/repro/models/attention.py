@@ -5,7 +5,11 @@ The Q/K/V projections — the paper's target bottleneck — route through
 ``core.qkv_fusion.apply_fused_qkv`` (the persistent-A / update_A mechanism)
 or ``core.quantized_linear.apply_linear`` under the config's ``quant_proj``
 mode.  Long sequences use a double-chunked online-softmax attention
-(never materializing S×T scores), required for the 32k prefill cells.
+(never materializing S×T scores), required for the 32k prefill cells —
+either the window-aware block-sparse Pallas flash engine
+(``kernels/flash_attention``; ``cfg.attn_impl`` selects) or the pure-jnp
+blockwise scan below.  Sequence lengths need not divide the chunk sizes
+on either path.
 """
 from __future__ import annotations
 
@@ -80,8 +84,16 @@ def _attend_blockwise(q, k, v, q_offset, *, scale, cap, causal, window,
     t_len = k.shape[1]
     q_chunk = min(q_chunk, s_len)
     kv_chunk = min(kv_chunk, t_len)
-    assert s_len % q_chunk == 0 and t_len % kv_chunk == 0
-    nq, nk = s_len // q_chunk, t_len // kv_chunk
+    # partial chunks: pad to chunk multiples; padded KV columns are masked
+    # below and padded q rows are sliced off the output
+    s_pad = -s_len % q_chunk
+    t_pad = -t_len % kv_chunk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0), (0, 0)))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    nq, nk = (s_len + s_pad) // q_chunk, (t_len + t_pad) // kv_chunk
 
     q_r = q.reshape(b, nq, q_chunk, kh, g, hd).swapaxes(0, 1)
     k_r = k.reshape(b, nk, kv_chunk, kh, hd).swapaxes(0, 1)
@@ -105,6 +117,8 @@ def _attend_blockwise(q, k, v, q_offset, *, scale, cap, causal, window,
             s = softcap(s, cap)
             s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window,
                                is_local=is_local)
+            if t_pad:
+                s = s + jnp.where(k_pos < t_len, 0.0, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new[..., None])
@@ -122,9 +136,9 @@ def _attend_blockwise(q, k, v, q_offset, *, scale, cap, causal, window,
         return None, o.astype(q.dtype)      # (b,kh,g,qc,hd)
 
     _, o = jax.lax.scan(q_step, None, (jnp.arange(nq), q_r))
-    # (nq,b,kh,g,qc,hd) → (b, s, kh, g, hd)
-    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(b, s_len, kh, g, hd)
-    return o
+    # (nq,b,kh,g,qc,hd) → (b, s, kh, g, hd), padded q rows dropped
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(b, s_len + s_pad, kh, g, hd)
+    return o[:, :s_len]
 
 
 def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
@@ -209,19 +223,36 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
 
     use_blockwise = (cache is None and memory is None
                      and s >= cfg.blockwise_attn_threshold)
-    # On a real TPU the flash-attention Pallas kernel replaces the jnp
-    # blockwise path for the no-window/no-cache case (identical math —
-    # tests/test_flash_attention.py); sliding-window support in-kernel is
-    # the recorded next step, so gemma2's local layers keep the jnp path.
+    # The flash-attention Pallas engine replaces the jnp blockwise path for
+    # the no-cache case — including gemma2-style local layers: the kernel
+    # masks the sliding window in-kernel and its block-sparse schedule only
+    # streams the KV blocks the window exposes (kernels/flash_attention).
     from repro.kernels.tiled_matmul.ops import kernel_mode
-    if (use_blockwise and kernel_mode() == "pallas"
-            and cfg.sliding_window is None):
+    use_flash = use_blockwise and (
+        cfg.attn_impl == "flash"
+        or (cfg.attn_impl == "auto"
+            and kernel_mode() in ("pallas", "pallas_interpret")))
+    if use_flash:
         from repro.kernels.flash_attention.ops import flash_attention
-        o = flash_attention(
-            q.reshape(b, s, kh * g, hd), k, v, scale=scale, causal=causal,
-            softcap=cfg.attn_logit_softcap,
-            q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv
-        ).reshape(b, s, kh, g, hd)
+        qf = q.reshape(b, s, kh * g, hd)
+
+        def _flash(window):
+            return flash_attention(
+                qf, k, v, scale=scale, causal=causal, window=window,
+                softcap=cfg.attn_logit_softcap,
+                q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv)
+
+        if cfg.sliding_window is None:
+            o = _flash(None)
+        elif isinstance(is_local, (bool, int)):
+            o = _flash(cfg.sliding_window if is_local else None)
+        else:
+            # per-layer flag traced by the layer-stack scan: compile both
+            # schedules once, select at run time
+            o = jax.lax.cond(jnp.asarray(is_local, bool),
+                             lambda: _flash(cfg.sliding_window),
+                             lambda: _flash(None))
+        o = o.reshape(b, s, kh, g, hd)
     elif use_blockwise:
         o = _attend_blockwise(
             q, k, v, 0, scale=scale, cap=cfg.attn_logit_softcap,

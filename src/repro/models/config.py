@@ -75,6 +75,10 @@ class ModelConfig:
     parallelism: str = "auto"        # auto | tp | dp (launch-time profile)
     attn_chunk_kv: int = 1024        # blockwise-attention KV chunk
     attn_chunk_q: int = 2048         # blockwise-attention Q chunk
+    attn_impl: str = "auto"          # auto | jnp | flash — long-seq attention
+    #   auto: flash engine when the Pallas kernels are live, else jnp
+    #   jnp: force the pure-jnp blockwise path; flash: force the flash
+    #   engine (on CPU its ref oracle — routing/parity tests)
     blockwise_attn_threshold: int = 4096   # use blockwise attn for seq >= this
     remat: str = "block"             # none | block  (checkpoint each layer)
     moe_impl: str = "auto"           # auto | local | sharded (shard_map)
@@ -128,3 +132,4 @@ class ModelConfig:
         if self.is_encoder_decoder:
             assert self.n_encoder_layers > 0
         assert self.quant_proj in ("none", "w8", "w8a8")
+        assert self.attn_impl in ("auto", "jnp", "flash"), self.attn_impl

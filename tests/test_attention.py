@@ -86,6 +86,78 @@ def test_grouped_vs_repeated_kv_equivalence():
         np.asarray(flat).reshape(b, s, -1), atol=2e-5, rtol=1e-4)
 
 
+@pytest.mark.parametrize("window,is_local", [(None, False), (64, True)])
+def test_blockwise_partial_chunks(window, is_local):
+    """Regression: non-chunk-multiple S (300 vs q_chunk 256) used to hit a
+    hard divisibility assert; now pad + mask, numerics vs dense."""
+    q, k, v = _qkv(b=1, s=300, t=300, kh=2, g=2, hd=16)
+    pos = jnp.arange(300)
+    dense = _attend_dense(q, k, v, pos, pos, scale=0.25, cap=None,
+                          causal=True, window=window, is_local=is_local)
+    block = _attend_blockwise(q, k, v, 0, scale=0.25, cap=None, causal=True,
+                              window=window, is_local=is_local,
+                              q_chunk=256, kv_chunk=128)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                               atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash-engine routing: local (sliding-window) layers take the Pallas path
+# ---------------------------------------------------------------------------
+def _routing_cfg(**kw):
+    from repro.models.config import ModelConfig
+    return ModelConfig(
+        name="t", family="dense", n_layers=2, d_model=64, vocab_size=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        sliding_window=16, blockwise_attn_threshold=32,
+        attn_chunk_q=32, attn_chunk_kv=32, dtype="float32", **kw)
+
+
+def test_local_layers_route_through_flash_kernel(monkeypatch):
+    """With the Pallas kernels live (kernel_mode() == 'pallas'), sliding-
+    window layers dispatch to the flash kernel with the window plumbed."""
+    from repro.kernels.flash_attention import ops as flash_ops
+    from repro.models.attention import apply_attention, init_attention
+
+    calls = []
+    real = flash_ops.flash_attention
+
+    def spy(q, k, v, **kw):
+        calls.append(kw["window"])
+        return real(q, k, v, **dict(kw, mode="ref"))
+
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    monkeypatch.setattr(flash_ops, "flash_attention", spy)
+
+    cfg = _routing_cfg()
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(1, 64, 64)).astype(np.float32))
+    pos = jnp.arange(64)
+    apply_attention(params, x, cfg, positions=pos, is_local=True)
+    apply_attention(params, x, cfg, positions=pos, is_local=False)
+    assert calls == [16, None]
+
+
+def test_flash_engine_matches_jnp_blockwise(monkeypatch):
+    """gemma2 smoke model end-to-end: interpret-mode flash engine (traced
+    per-layer is_local → lax.cond) vs the pure-jnp blockwise path."""
+    from repro.configs.gemma2_27b import smoke_config
+    from repro.models.transformer import apply_model, init_model
+
+    cfg = smoke_config().replace(dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0,
+                                cfg.vocab_size)
+    monkeypatch.setenv("REPRO_KERNELS", "pallas_interpret")
+    flash_logits, _, _ = apply_model(params, tokens, cfg)
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    jnp_logits, _, _ = apply_model(params, tokens,
+                                   cfg.replace(attn_impl="jnp"))
+    np.testing.assert_allclose(np.asarray(flash_logits),
+                               np.asarray(jnp_logits),
+                               atol=2e-4, rtol=1e-3)
+
+
 def test_sliding_window_blocks_distant_tokens():
     b, s, kh, g, hd = 1, 32, 1, 1, 8
     q, k, v = _qkv(b, s, s, kh, g, hd)

@@ -1,18 +1,32 @@
-"""Flash-attention Pallas kernel vs dense oracle (shape/feature sweep)."""
+"""Flash-attention Pallas kernel vs dense oracle (shape/feature sweep).
+
+Covers the window-aware block-sparse engine: in-kernel sliding-window
+masking, GQA-native KV (index-map broadcast, no HBM repeat), native
+partial q/kv chunks, and the block-sparse KV schedule (fully-masked
+blocks never streamed — asserted on ``flash_schedule`` counts, which size
+the launched grid).
+"""
+import itertools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.flash_attention.kernel import flash_schedule
 from repro.kernels.flash_attention.ops import flash_attention
 
 RNG = np.random.default_rng(0)
 
 CASES = [
-    # (b, s, h, kh, d, causal, softcap)
-    (2, 128, 4, 2, 64, True, None),      # GQA causal
-    (1, 256, 2, 2, 64, False, None),     # bidirectional MHA
-    (2, 128, 4, 1, 64, True, 30.0),      # MQA + softcap (gemma2-style)
-    (1, 512, 2, 2, 128, True, None),     # longer seq, MXU-width head
+    # (b, s, h, kh, d, causal, softcap, window)
+    (2, 128, 4, 2, 64, True, None, None),    # GQA causal
+    (1, 256, 2, 2, 64, False, None, None),   # bidirectional MHA
+    (2, 128, 4, 1, 64, True, 30.0, None),    # MQA + softcap (gemma2-style)
+    (1, 512, 2, 2, 128, True, None, None),   # longer seq, MXU-width head
+    (1, 256, 4, 2, 64, True, None, 64),      # sliding-window local layer
+    (1, 300, 4, 4, 64, True, None, None),    # partial q/kv chunks
+    (1, 200, 4, 1, 64, True, 30.0, 64),      # window + softcap + partial
 ]
 
 
@@ -23,11 +37,28 @@ def _qkv(b, s, h, kh, d, dtype=np.float32):
     return q, k, v
 
 
-@pytest.mark.parametrize("b,s,h,kh,d,causal,cap", CASES)
-def test_flash_matches_dense(b, s, h, kh, d, causal, cap):
+@pytest.mark.parametrize("b,s,h,kh,d,causal,cap,win", CASES)
+def test_flash_matches_dense(b, s, h, kh, d, causal, cap, win):
     q, k, v = _qkv(b, s, h, kh, d)
-    r = flash_attention(q, k, v, causal=causal, softcap=cap, mode="ref")
-    p = flash_attention(q, k, v, causal=causal, softcap=cap,
+    r = flash_attention(q, k, v, causal=causal, softcap=cap, window=win,
+                        mode="ref")
+    p = flash_attention(q, k, v, causal=causal, softcap=cap, window=win,
+                        mode="pallas_interpret", q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                               atol=5e-6, rtol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "win,g,s,cap",
+    list(itertools.product([None, 64, 128], [1, 4], [256, 300], [None, 30.0])))
+def test_flash_parity_sweep(win, g, s, cap):
+    """Window × GQA group × partial-chunk × softcap cross product."""
+    h = 4
+    q, k, v = _qkv(1, s, h, h // g, 64)
+    r = flash_attention(q, k, v, causal=True, softcap=cap, window=win,
+                        mode="ref")
+    p = flash_attention(q, k, v, causal=True, softcap=cap, window=win,
                         mode="pallas_interpret", q_chunk=64, kv_chunk=64)
     np.testing.assert_allclose(np.asarray(r), np.asarray(p),
                                atol=5e-6, rtol=1e-5)
@@ -36,11 +67,22 @@ def test_flash_matches_dense(b, s, h, kh, d, causal, cap):
 def test_flash_chunk_invariance():
     q, k, v = _qkv(1, 256, 2, 2, 64)
     outs = [np.asarray(flash_attention(
-        q, k, v, causal=True, mode="pallas_interpret",
+        q, k, v, causal=True, window=48, mode="pallas_interpret",
         q_chunk=qc, kv_chunk=kc)) for qc, kc in [(32, 64), (128, 32),
-                                                 (256, 256)]]
+                                                 (256, 256), (64, 64)]]
     for o in outs[1:]:
         np.testing.assert_allclose(outs[0], o, atol=5e-6, rtol=1e-5)
+
+
+def test_flash_oversized_chunks_partial():
+    """Chunks larger than the (non-multiple) sequence collapse to one
+    padded block; masking keeps the result exact."""
+    q, k, v = _qkv(1, 300, 2, 2, 64)
+    r = flash_attention(q, k, v, mode="ref")
+    p = flash_attention(q, k, v, mode="pallas_interpret",
+                        q_chunk=2048, kv_chunk=1024)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                               atol=5e-6, rtol=1e-5)
 
 
 def test_flash_bf16_inputs():
@@ -53,3 +95,70 @@ def test_flash_bf16_inputs():
                                np.asarray(p, np.float32),
                                atol=3e-2, rtol=3e-2)
     assert p.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse schedule: the grid is sized by flash_schedule, so these
+# counter assertions are grid-size assertions.
+# ---------------------------------------------------------------------------
+def test_schedule_causal_skips_above_diagonal():
+    sc = flash_schedule(512, 512, q_chunk=128, kv_chunk=128, causal=True,
+                        window=None)
+    assert (sc.num_q_blocks, sc.num_kv_blocks) == (4, 4)
+    assert sc.blocks_touched == 1 + 2 + 3 + 4     # lower triangle only
+    assert sc.blocks_dense == 16
+    assert sc.max_kv_steps == 4                   # last row still needs all
+
+
+def test_schedule_window_shrinks_kv_grid():
+    sc = flash_schedule(1024, 1024, q_chunk=128, kv_chunk=128, causal=True,
+                        window=128)
+    assert sc.max_kv_steps == 2                   # ≪ dense 8 — grid shrunk
+    assert sc.blocks_touched == 1 + 7 * 2
+    assert sc.blocks_dense == 64
+    # window spanning several kv blocks
+    sc = flash_schedule(1024, 1024, q_chunk=128, kv_chunk=64, causal=True,
+                        window=256)
+    assert sc.max_kv_steps == 6
+    assert sc.blocks_touched < sc.blocks_dense
+
+
+def test_schedule_non_causal_window():
+    # the window mask is one-sided (k > q - w): without causality nothing
+    # bounds KV from above, so only j_lo prunes (later rows skip the head)
+    sc = flash_schedule(512, 512, q_chunk=64, kv_chunk=64, causal=False,
+                        window=64)
+    assert sc.max_kv_steps == 8
+    assert sc.blocks_touched == 43 < sc.blocks_dense
+    sc_dense = flash_schedule(512, 512, q_chunk=64, kv_chunk=64,
+                              causal=False, window=None)
+    assert sc_dense.blocks_touched == sc_dense.blocks_dense
+
+
+def test_schedule_partial_chunks_ceil_grid():
+    sc = flash_schedule(300, 300, q_chunk=128, kv_chunk=128, causal=True,
+                        window=None)
+    assert (sc.num_q_blocks, sc.num_kv_blocks) == (3, 3)
+    assert sc.blocks_touched == 6
+
+
+# ---------------------------------------------------------------------------
+# GQA-native KV: the pallas_call consumes (B, KH, T, D) — the KV tensor is
+# never repeated to the query head count before the kernel.
+# ---------------------------------------------------------------------------
+def test_gqa_kv_not_materialized():
+    b, s, h, kh, d = 1, 128, 4, 2, 64
+    q, k, v = _qkv(b, s, h, kh, d)
+
+    def f(q, k, v):
+        return flash_attention(q, k, v, mode="pallas_interpret",
+                               q_chunk=64, kv_chunk=64)
+
+    jaxpr = jax.make_jaxpr(f)(q, k, v)
+    pallas_eqns = [e for e in jaxpr.jaxpr.eqns
+                   if "pallas" in e.primitive.name]
+    assert pallas_eqns, [e.primitive.name for e in jaxpr.jaxpr.eqns]
+    shapes = [tuple(var.aval.shape) for e in pallas_eqns for var in e.invars]
+    # true KV layout reaches the kernel; nothing h-headed but the q operand
+    assert (b, kh, s, d) in shapes
+    assert shapes.count((b, h, s, d)) == 1  # q only — k/v never repeated

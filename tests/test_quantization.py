@@ -111,3 +111,50 @@ def test_paper_shape_plan_is_panel_resident():
         plan = choose_plan(m, k, n)
         assert plan.k_steps == 1          # A panel holds the full K
         assert plan.arithmetic_intensity > 100
+
+
+# ---------------------------------------------------------------------------
+# apply_linear(mode="w8") on-the-fly quantization: stack-aware scales
+# ---------------------------------------------------------------------------
+def test_w8_stacked_weights_parity():
+    """Regression: on-the-fly w8 quantize of scan-stacked (L, K, N) master
+    weights used channel_axes=(1,) — per-K-row scales reduced over the
+    layer dim.  It must match quantize_linear's per-(layer, out-channel)
+    scales and the per-layer application bitwise."""
+    from repro.core.quantized_linear import apply_linear, quantize_linear
+
+    rng = np.random.default_rng(11)
+    L, M, K, N = 3, 4, 16, 8
+    w = jnp.asarray(rng.normal(size=(L, K, N)).astype(np.float32))
+    # make per-layer absmax genuinely different so wrong axes change scales
+    w = w * jnp.asarray([0.1, 1.0, 10.0])[:, None, None]
+    x = jnp.asarray(rng.normal(size=(L, M, K)).astype(np.float32))
+
+    y_fly = apply_linear({"w": w}, x, mode="w8")
+    y_offline = apply_linear(quantize_linear({"w": w}), x, mode="w8")
+    y_per_layer = jnp.stack(
+        [apply_linear({"w": w[layer]}, x[layer], mode="w8")
+         for layer in range(L)])
+    np.testing.assert_array_equal(np.asarray(y_fly), np.asarray(y_offline))
+    np.testing.assert_array_equal(np.asarray(y_fly), np.asarray(y_per_layer))
+
+    # stacked bias must align its layer axis to y's axis 0 even with an
+    # extra batch dim (L == B is the silent-wrong trap)
+    b = jnp.asarray(rng.normal(size=(L, N)).astype(np.float32))
+    xb = jnp.asarray(rng.normal(size=(L, L, M, K)).astype(np.float32))
+    y = apply_linear({"w": w, "b": b}, xb, mode="w8")
+    per = jnp.stack([apply_linear({"w": w[layer], "b": b[layer]}, xb[layer],
+                                  mode="w8") for layer in range(L)])
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(per))
+
+
+def test_w8_single_layer_unchanged():
+    from repro.core.quantized_linear import apply_linear, quantize_linear
+
+    rng = np.random.default_rng(12)
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    y_fly = apply_linear({"w": w, "b": b}, x, mode="w8")
+    y_off = apply_linear(quantize_linear({"w": w, "b": b}), x, mode="w8")
+    np.testing.assert_array_equal(np.asarray(y_fly), np.asarray(y_off))
