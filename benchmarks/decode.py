@@ -1,0 +1,120 @@
+"""Decode engine: ms/token + KV pages touched, dense vs paged.
+
+Two views per (arch, layout) row, mirroring ``benchmarks/flash_attention``:
+
+  * **pages touched** — analytic ``flash_decode_schedule`` counters: KV
+    pages a decode step streams at the batch's final lengths (paged) vs
+    the ``B * ceil(S_max/page)`` page-equivalents of the dense rectangle.
+    Exact and hardware-independent: for the Pallas path they ARE the
+    launched page walk.
+  * **ms/token** — host wall time of the jitted ``lax.scan`` greedy loop
+    (ordering-only on CPU, see benchmarks/common.py), prefill excluded.
+
+The batch mixes prompt lengths (non-page-multiples included) so the
+paged counters show per-sequence savings the dense layout cannot have.
+
+Run: ``python -m benchmarks.decode [--smoke] [--json PATH]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_options, print_table, timeit, write_json
+from repro.configs import get_smoke_config
+from repro.core.tiling import ceil_div
+from repro.kernels.flash_attention.decode import (flash_decode_schedule,
+                                                 pages_touched)
+from repro.kernels.tiled_matmul.ops import kernel_mode
+from repro.models.transformer import init_model
+from repro.serving.cache import init_cache
+from repro.serving.engine import greedy_decode, prefill
+
+# name, arch, batch, prompt_lens, n_steps, max_len, page_size
+SHAPES = [
+    ("qwen2_5_3b_b4_mixed", "qwen2_5_3b", 4, [64, 17, 48, 5], 16, 256, 16),
+    ("gemma2_local_b2", "gemma2_27b", 2, [48, 23], 16, 256, 16),
+]
+SMOKE_SHAPES = [
+    ("qwen2_5_3b_b3_mixed", "qwen2_5_3b", 3, [12, 5, 9], 4, 32, 4),
+    ("gemma2_local_b2", "gemma2_27b", 2, [10, 7], 4, 32, 4),
+]
+
+
+def bench_one(name, arch, batch, prompt_lens, n_steps, max_len, page):
+    cfg = get_smoke_config(arch).replace(quant_proj="none")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    s_pad = max(prompt_lens)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, s_pad), 0,
+                                 cfg.vocab_size)
+    lens = jnp.asarray(prompt_lens, jnp.int32)
+    # greedy_decode performs n_steps cache writes after prefill, so the
+    # last step attends a context of prompt_len + n_steps tokens
+    final_lens = [p + n_steps for p in prompt_lens]
+    max_pages = ceil_div(max_len, page)
+
+    rows = []
+    for layout in ("dense", "paged"):
+        kw = {} if layout == "dense" else {"layout": "paged",
+                                           "page_size": page}
+        cache = init_cache(cfg, batch, max_len=max_len, **kw)
+        next_logits, cache = prefill(params, cache, prompts, lens, cfg)
+        first = jnp.argmax(next_logits, -1)[:, None].astype(jnp.int32)
+        start = lens if layout == "dense" else None
+
+        # greedy_decode donates its cache: pre-make one copy per run
+        # OUTSIDE the timed region (timing the copies would fold
+        # cache-size-proportional bandwidth into ms_per_token)
+        iters, warmup = 2, 1
+        copies = iter([jax.tree.map(jnp.copy, cache)
+                       for _ in range(iters + warmup)])
+
+        def run(start=start):
+            out, _ = greedy_decode(params, next(copies), first, start,
+                                   n_steps, cfg)
+            return out
+
+        sec, _ = timeit(run, iters=iters, warmup=warmup)
+
+        # per-layer average pages streamed at the final lengths: window
+        # pruning applies only to the model's *local* layers (gemma2
+        # alternates local/global — weight the two schedules accordingly)
+        if layout == "paged":
+            t_global = pages_touched(
+                final_lens, flash_decode_schedule(max_pages, page))
+            if cfg.sliding_window is None:
+                frac_local = 0.0
+            else:
+                frac_local = (0.5 if cfg.layer_pattern == "local_global"
+                              else 1.0)
+            t_local = pages_touched(
+                final_lens, flash_decode_schedule(
+                    max_pages, page, window=cfg.sliding_window)) \
+                if frac_local else t_global
+            touched = frac_local * t_local + (1 - frac_local) * t_global
+        else:
+            touched = batch * max_pages
+        rows.append({
+            "shape": name, "layout": layout, "B": batch,
+            "S_max": max_len, "page": page, "steps": n_steps,
+            "mode": kernel_mode(),
+            "ms_per_token": sec * 1e3 / (n_steps * batch),
+            "pages_touched": touched,
+            "pages_dense": batch * max_pages,
+            "streamed_frac": touched / (batch * max_pages),
+        })
+    return rows
+
+
+def main(argv=None) -> None:
+    args = bench_options(argv, description=__doc__)
+    rows = []
+    for spec in (SMOKE_SHAPES if args.smoke else SMOKE_SHAPES + SHAPES):
+        rows.extend(bench_one(*spec))
+    print_table("paged-KV decode engine (dense vs paged)", rows)
+    if args.json:
+        write_json(args.json, {"decode": rows})
+
+
+if __name__ == "__main__":
+    main()

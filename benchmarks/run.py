@@ -8,6 +8,8 @@
   partial_tile      — §5 (fractional-tile overhead)
   persistence       — §4.2 (update_A amortization via fused QKV)
   flash_attention   — beyond-paper: block-sparse KV schedule counters
+  decode            — beyond-paper: paged-KV decode engine (ms/token,
+                      pages touched dense vs paged)
 
 Host wall-times are ordering-only (no TPU in this container); the graded
 performance numbers are the dry-run roofline terms in EXPERIMENTS.md.
@@ -26,6 +28,7 @@ MODULES = [
     "partial_tile",
     "persistence",
     "flash_attention",
+    "decode",
 ]
 
 

@@ -1,10 +1,16 @@
-"""Batched int8 serving: prefill a batch of prompts, decode new tokens.
+"""Batched int8 serving on the paged-KV decode engine.
 
-    PYTHONPATH=src python examples/serve_quantized.py --tokens 16
+    PYTHONPATH=src python examples/serve_quantized.py --tokens 16 \
+        [--layout paged|dense] [--page-size 16]
 
 The paper's deployment story end-to-end: offline weight quantization →
 dynamic activation quantization per step → int8 GEMMs for every
-projection → dequant epilogue; KV cache in bf16.
+projection → dequant epilogue; KV cache in bf16.  Serving runs through
+the engine's prefill → decode handoff (``serving/engine.py``): one
+cache-writing prefill over the whole (mixed-length) prompt batch, then a
+single jitted ``lax.scan`` greedy loop with donated cache buffers — under
+``--layout paged`` the KV lives in fixed-size pages behind per-sequence
+page tables and decode walks only occupied pages (docs/DESIGN.md).
 """
 import argparse
 import time
@@ -16,7 +22,7 @@ from repro.configs import get_smoke_config
 from repro.core.quantize_params import quantize_model_params
 from repro.models.transformer import init_model
 from repro.serving.cache import init_cache
-from repro.serving.engine import serve_step
+from repro.serving.engine import greedy_decode, prefill
 
 
 def main():
@@ -25,44 +31,42 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--layout", default="paged", choices=["dense", "paged"])
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(quant_proj="w8a8")
     params = quantize_model_params(
         init_model(jax.random.PRNGKey(0), cfg.replace(quant_proj="none")))
-    max_len = args.prompt_len + args.tokens
-    cache = init_cache(cfg, args.batch, max_len=max_len)
+    max_len = args.prompt_len + args.tokens + 1
+    cache = init_cache(cfg, args.batch, max_len=max_len, layout=args.layout,
+                       page_size=args.page_size)
 
+    # mixed-length prompt batch: sequence b keeps max(prompt_len - 2b, 4)
+    # tokens of the right-padded prompt
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
+    prompt_lens = jnp.clip(
+        args.prompt_len - jnp.arange(args.batch, dtype=jnp.int32) * 2,
+        4, args.prompt_len)
 
-    @jax.jit
-    def step(cache, tok, pos):
-        logits, cache = serve_step(params, cache, tok, pos, cfg)
-        nxt = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(tok.dtype)
-        return cache, nxt
-
-    # prefill token-by-token (cache-writing path), then decode
     t0 = time.perf_counter()
-    tok = prompts[:, :1]
-    for t in range(args.prompt_len):
-        cache, _ = step(cache, prompts[:, t:t + 1], jnp.asarray(t, jnp.int32))
+    next_logits, cache = prefill(params, cache, prompts, prompt_lens, cfg)
+    first = jnp.argmax(next_logits, axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(first)
     t_prefill = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    generated = []
-    tok = prompts[:, -1:]
-    for i in range(args.tokens):
-        cache, tok = step(cache, tok,
-                          jnp.asarray(args.prompt_len + i, jnp.int32))
-        generated.append(tok)
-    jax.block_until_ready(tok)
+    start = prompt_lens if args.layout == "dense" else None
+    out, cache = greedy_decode(params, cache, first, start, args.tokens,
+                               cfg)
+    jax.block_until_ready(out)
     t_decode = time.perf_counter() - t0
 
-    out = jnp.concatenate(generated, axis=1)
     tps = args.batch * args.tokens / t_decode
-    print(f"arch={cfg.name} batch={args.batch}")
+    print(f"arch={cfg.name} batch={args.batch} layout={args.layout} "
+          f"prompt_lens={prompt_lens.tolist()}")
     print(f"prefill {args.prompt_len} tok: {t_prefill:.2f}s   "
           f"decode {args.tokens} tok: {t_decode:.2f}s "
           f"({tps:.1f} tok/s host-CPU)")

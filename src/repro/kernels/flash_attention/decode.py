@@ -1,0 +1,264 @@
+"""Pallas TPU kernel: paged-KV flash decode (single-query flash attention).
+
+Decode-side companion of ``kernel.py``'s prefill engine, extending the
+same schedule vocabulary to the serving cache: instead of a rectangular
+``(B, KH, T, D)`` KV tensor, KV lives in a **page pool** ``(P, page, KH,
+D)`` addressed through a per-sequence **page table** — and the KV sweep
+walks only the pages a sequence actually occupies:
+
+  * **Page-table index map** — the page table and the per-sequence
+    context lengths ride in scalar-prefetch memory
+    (``pltpu.PrefetchScalarGridSpec``), so the KV BlockSpec index map can
+    compute, per grid step, the *physical* page id
+    ``page_table[b, min(j_lo + jj, j_hi)]`` before the DMA is issued.
+    Fully out-of-range steps revisit ``j_hi`` (the clamped walk of
+    ``kernel.py`` — unchanged block index, copy elided) and are
+    compute-guarded with ``pl.when``.
+  * **Length-aware sweep** — the grid's KV extent is the *static* page
+    budget ``max_steps`` (page-table width, pruned by the sliding
+    window), but the per-sequence bounds ``[j_lo, j_hi]`` are *dynamic*,
+    read from ``lengths``: a 300-token sequence in a 4k-page-table batch
+    streams ceil(300/page) pages, not 4k/page.
+  * **Sliding-window page pruning** — a window of W tokens bounds the
+    visible span to ``q_len + W - 1`` tokens, i.e. at most
+    ``ceil((q_len + W - 1)/page) + 1`` pages, independent of context
+    length; ``j_lo`` starts the walk at the window's first page.
+  * **GQA-native grouping** — the grid is ``(B · KH, steps)``: each KV
+    head's page stream is fetched **once** and consumed by all ``g = H //
+    KH`` query heads of its group, laid out as rows of one
+    ``(g · q_len, D)`` q block (the decode analogue of the prefill
+    kernel's index-map broadcast).
+  * **In-kernel masking** — causality against the per-row position
+    ``ctx - q_len + (row mod q_len)`` and the window bound are fused
+    broadcasted-iota compares, exactly the prefill kernel's machinery;
+    the partially-filled last page is masked by the same compare (and the
+    page's undefined V tail is zeroed before the PV product).
+
+Grid (n, jj): n = B·KH flat KV-head index, jj the schedule-relative page
+step, innermost; VMEM scratch carries (acc f32 (g·q_len, D), m, l) across
+jj.  ``q_len`` is 1 for plain decode and may be a small number for
+speculative / chunked verification steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tiling import ceil_div
+
+NEG_INF = -2.3819763e38
+
+__all__ = ["FlashDecodeSchedule", "flash_decode_schedule",
+           "paged_decode_kernel", "pages_touched"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashDecodeSchedule:
+    """Static plan for one paged decode launch.
+
+    ``max_steps`` is the launched KV-grid extent (pages per sequence the
+    sweep *budgets* for); the pages actually streamed are the dynamic
+    per-sequence ``[j_lo, j_hi]`` ranges — ``pages_touched`` counts them
+    for a concrete batch of lengths.  ``max_steps < max_pages`` whenever
+    the sliding window prunes the walk.
+    """
+
+    page_size: int
+    max_pages: int
+    q_len: int
+    window: int | None
+    max_steps: int
+
+
+def flash_decode_schedule(max_pages: int, page_size: int, *,
+                          q_len: int = 1,
+                          window: int | None = None) -> FlashDecodeSchedule:
+    """Plan the paged KV sweep for decode.
+
+    Args:
+      max_pages: page-table width (logical page budget per sequence).
+      page_size: tokens per page.
+      q_len: new tokens attended per step (1 for plain decode).
+      window: sliding-window size in tokens, or None for global layers.
+
+    The launched extent is ``max_pages`` for global layers; a window
+    bounds the visible token span to ``q_len + window - 1`` and with it
+    the page span to ``ceil(span / page_size) + 1`` (the +1 covers an
+    unaligned window straddling one extra page boundary).
+    """
+    assert max_pages >= 1 and page_size >= 1 and q_len >= 1
+    max_steps = max_pages
+    if window is not None:
+        span = q_len + window - 1
+        max_steps = min(max_pages, ceil_div(span, page_size) + 1)
+    return FlashDecodeSchedule(page_size=page_size, max_pages=max_pages,
+                               q_len=q_len, window=window,
+                               max_steps=max_steps)
+
+
+def _page_bounds(ctx, *, q_len, page_size, window,
+                 _min=jnp.minimum, _max=jnp.maximum):
+    """Inclusive [j_lo, j_hi] logical-page range for a context of ``ctx``
+    tokens (the current q rows occupy positions ctx-q_len .. ctx-1).
+
+    Traced int32 in the index maps / kernel body; Python ints (with
+    ``min``/``max`` passed in) in ``pages_touched``.
+    """
+    j_hi = _max(ctx - 1, 0) // page_size
+    j_lo = 0
+    if window is not None:
+        # first k visible to the oldest q row (pos ctx - q_len):
+        # k > pos - window  =>  k_min = max(ctx - q_len - window + 1, 0)
+        first_k = _max(ctx - q_len - window + 1, 0)
+        j_lo = _min(first_k // page_size, j_hi)
+    return j_lo, j_hi
+
+
+def pages_touched(lengths, sched: FlashDecodeSchedule) -> int:
+    """KV pages streamed for one decode step over a batch of context
+    lengths (post-write, i.e. including the step's new tokens) — the
+    analytic benchmark counter (cf. ``FlashSchedule.blocks_touched``)."""
+    total = 0
+    for ctx in lengths:
+        j_lo, j_hi = _page_bounds(int(ctx), q_len=sched.q_len,
+                                  page_size=sched.page_size,
+                                  window=sched.window, _min=min, _max=max)
+        total += j_hi - j_lo + 1
+    return total
+
+
+def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale, window, softcap,
+                   sched: FlashDecodeSchedule, kh, out_dtype):
+    n = pl.program_id(0)
+    jj = pl.program_id(1)
+    b = n // kh
+    ps, qs = sched.page_size, sched.q_len
+    ctx = len_ref[b]
+    j_lo, j_hi = _page_bounds(ctx, q_len=qs, page_size=ps, window=window)
+    j = jnp.minimum(j_lo + jj, j_hi)        # must match the KV index map
+
+    @pl.when(jj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j_lo + jj <= j_hi)
+    def _compute():
+        q = q_ref[0, 0]                     # (g·qs, D)
+        k = k_ref[0, :, 0, :]               # (ps, D)
+        v = v_ref[0, :, 0, :]               # (ps, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        # rows are the query group laid out (g, qs) flattened: row r is
+        # query token r % qs at position ctx - qs + r % qs
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        q_pos = ctx - qs + row % qs
+        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        allowed = k_pos <= q_pos            # causal + page tail in one
+        if window is not None:
+            allowed &= k_pos > q_pos - window
+        s = jnp.where(allowed, s, NEG_INF)
+        # zero the last page's uncommitted V tail (0 · NaN would poison PV)
+        vrow = jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(j * ps + vrow < ctx, v, 0)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        # rows with no visible KV yet have m_new == NEG_INF → exp(0): re-mask
+        p = jnp.where(allowed, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jj == pl.num_programs(1) - 1)
+    def _epilogue():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-37)).astype(out_dtype)
+
+
+def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, page_table: jax.Array,
+                        lengths: jax.Array, *, scale: float,
+                        window: int | None = None,
+                        softcap: float | None = None,
+                        out_dtype=None, interpret: bool = False):
+    """Paged flash decode.  Shapes:
+
+      q          (B, H, q_len, D) — the step's new queries (q_len small),
+      k_pages    (P, page, KH, D) — one layer's KV page pool (v_pages alike),
+      page_table (B, max_pages) int32 — physical page of logical page j,
+      lengths    (B,) int32 — context length *including* the q_len new
+                 tokens (their K/V must already be committed to the pages).
+
+    Returns (B, H, q_len, D) in ``out_dtype`` (default q.dtype).  H must
+    be a multiple of KH; each KV head's page stream is fetched once per
+    (b, kv-head) grid cell and consumed by its whole query group.  The
+    page table and lengths travel via scalar prefetch so the KV index map
+    resolves physical pages before each DMA.
+    """
+    b, h, qs, d = q.shape
+    p_total, ps, kh, dk = k_pages.shape
+    assert d == dk and h % kh == 0, (q.shape, k_pages.shape)
+    assert v_pages.shape == k_pages.shape
+    max_pages = page_table.shape[1]
+    assert page_table.shape == (b, max_pages)
+    g = h // kh
+    out_dtype = out_dtype or q.dtype
+    sched = flash_decode_schedule(max_pages, ps, q_len=qs, window=window)
+    rows = g * qs
+
+    # (B, H, qs, D) → (B, KH, g·qs, D): group rows of one KV head together
+    qg = q.reshape(b, kh, rows, d)
+
+    bounds = functools.partial(_page_bounds, q_len=qs, page_size=ps,
+                               window=window)
+
+    def q_index(n, jj, pt_ref, len_ref):
+        return (n // kh, n % kh, 0, 0)
+
+    def kv_index(n, jj, pt_ref, len_ref):
+        sb = n // kh
+        j_lo, j_hi = bounds(len_ref[sb])
+        # clamped sparse walk: trailing steps revisit j_hi (copy elided)
+        return (pt_ref[sb, jnp.minimum(j_lo + jj, j_hi)], 0, n % kh, 0)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, softcap=softcap,
+        sched=sched, kh=kh, out_dtype=out_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * kh, sched.max_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d), q_index),
+            pl.BlockSpec((1, ps, 1, d), kv_index),
+            pl.BlockSpec((1, ps, 1, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, d), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, rows, d), out_dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(b, h, qs, d)

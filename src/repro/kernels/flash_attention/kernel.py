@@ -100,7 +100,17 @@ def _kv_block_bounds(i, *, q_chunk, kv_chunk, num_kv, causal, window,
 def flash_schedule(s_len: int, t_len: int, *, q_chunk: int, kv_chunk: int,
                    causal: bool = True,
                    window: int | None = None) -> FlashSchedule:
-    """Plan the block-sparse KV sweep (all-static; also the bench counter)."""
+    """Plan the block-sparse KV sweep for an (S, T) attention problem.
+
+    All-static: chunk sizes are clamped to the (8-aligned) sequence
+    lengths, grids are ceil-divided (native partial chunks), and the
+    returned ``max_kv_steps`` is the KV grid extent
+    ``flash_attention_kernel`` launches — ``blocks_touched`` vs
+    ``blocks_dense`` is therefore an exact streamed-HBM counter, used by
+    ``benchmarks/flash_attention.py`` and the schedule tests.  Decode
+    over a paged cache plans with ``decode.flash_decode_schedule``
+    instead (dynamic per-sequence lengths, static page budget).
+    """
     q_chunk = min(q_chunk, round_up(s_len, 8))
     kv_chunk = min(kv_chunk, round_up(t_len, 8))
     num_q = ceil_div(s_len, q_chunk)

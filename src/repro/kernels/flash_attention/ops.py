@@ -11,10 +11,11 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.decode import paged_decode_kernel
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.tiled_matmul.ops import kernel_mode
 
-__all__ = ["flash_attention"]
+__all__ = ["flash_attention", "paged_decode_attention"]
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -25,10 +26,15 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     mode: str | None = None) -> jax.Array:
     """Multi-head attention, (B, S, H, D) q with (B, T, KH, D) kv (GQA).
 
-    Returns (B, S, H, D).  KV heads are broadcast across query groups
-    inside the kernel (index-map broadcast, no HBM repeat).  ``window``
-    applies a sliding-window mask (k > q - window) with a block-sparse KV
-    sweep; S/T may be arbitrary (native partial chunks).
+    Returns (B, S, H, D) in q's dtype (f32 softmax inside).  KV heads are
+    broadcast across query groups inside the kernel (index-map broadcast,
+    no HBM repeat).  ``window`` applies a sliding-window mask
+    (k > q - window) with a block-sparse KV sweep; S/T may be arbitrary
+    (native partial chunks).  Lowers to the ``flash_schedule``-planned
+    Pallas kernel under ``pallas``/``pallas_interpret`` and to the dense
+    oracle ``ref.attention_ref`` under ``ref`` (mode defaults to
+    ``kernel_mode()``); decode steps over a paged cache use
+    ``paged_decode_attention`` instead.
     """
     mode = mode or kernel_mode()
     b, s, h, d = q.shape
@@ -48,4 +54,42 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             qh, kh_, vh_, scale=scale, causal=causal, window=window,
             softcap=softcap, q_chunk=q_chunk, kv_chunk=kv_chunk,
             interpret=(mode == "pallas_interpret"))
+    return o.transpose(0, 2, 1, 3)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *,
+                           scale: float | None = None,
+                           window: int | None = None,
+                           softcap: float | None = None,
+                           mode: str | None = None) -> jax.Array:
+    """Decode-step attention over a paged KV cache (always causal).
+
+    q (B, q_len, H, D) — the step's new queries (q_len = 1 for plain
+    decode); k_pages/v_pages (P, page, KH, D) one layer's page pool;
+    page_table (B, max_pages) int32; lengths (B,) int32 per-sequence
+    context *including* the new tokens (their K/V already committed).
+    Returns (B, q_len, H, D).
+
+    Lowers to the paged flash-decode kernel (``decode.py``) under
+    ``pallas``/``pallas_interpret`` — a length-aware page walk that
+    streams each KV-head's occupied pages once per query group — and to
+    the dense gather oracle ``ref.paged_attention_ref`` under ``ref``.
+    """
+    mode = mode or kernel_mode()
+    b, qs, h, d = q.shape
+    kh = k_pages.shape[2]
+    assert h % kh == 0, (h, kh)
+    scale = scale if scale is not None else d ** -0.5
+
+    qh = q.transpose(0, 2, 1, 3)            # (B, H, qs, D)
+    if mode == "ref":
+        o = _ref.paged_attention_ref(qh, k_pages, v_pages, page_table,
+                                     lengths, scale=scale, window=window,
+                                     softcap=softcap)
+    else:
+        o = paged_decode_kernel(qh, k_pages, v_pages, page_table, lengths,
+                                scale=scale, window=window, softcap=softcap,
+                                interpret=(mode == "pallas_interpret"))
     return o.transpose(0, 2, 1, 3)

@@ -1,9 +1,13 @@
-"""Pure-jnp oracle for the flash-attention kernel: dense softmax attention.
+"""Pure-jnp oracles for the flash-attention kernels: dense softmax
+attention (prefill) and its paged-decode counterpart.
 
-GQA-native like the kernel: q (B, H, S, D) against k/v (B, KH, T, D) with
-KV broadcast across the H // KH query groups by reshape — no materialized
-``jnp.repeat``.  Supports the kernel's full mask structure (causal,
-sliding window) so every schedule has a dense oracle.
+GQA-native like the kernels: q (B, H, S, D) against k/v (B, KH, T, D)
+with KV broadcast across the H // KH query groups by reshape — no
+materialized ``jnp.repeat``.  Supports the kernels' full mask structure
+(causal, sliding window) so every schedule has a dense oracle;
+``paged_attention_ref`` gathers the page pool back into a dense cache and
+applies the decode masks, making it the reference for the paged
+flash-decode kernel (``decode.py``).
 """
 from __future__ import annotations
 
@@ -42,3 +46,54 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-37)
     o = jnp.einsum("bkgst,bktd->bkgsd", (p / l).astype(v.dtype), v)
     return o.reshape(b, h, s_len, d)
+
+
+def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a paged pool back into a dense per-sequence cache.
+
+    pages (P, page, KH, D); page_table (B, max_pages) int32 →
+    (B, max_pages·page, KH, D) — logical token order per sequence.
+    """
+    b, max_pages = page_table.shape
+    _, page, kh, d = pages.shape
+    return pages[page_table].reshape(b, max_pages * page, kh, d)
+
+
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                        lengths: jnp.ndarray, *, scale: float,
+                        window: int | None = None,
+                        softcap: float | None = None) -> jnp.ndarray:
+    """Dense decode oracle over a paged cache.
+
+    q (B, H, q_len, D); pools (P, page, KH, D); lengths (B,) int32 is the
+    per-sequence context *including* the q_len new tokens → (B, H, q_len,
+    D).  Row r of sequence b sits at position ``lengths[b] - q_len + r``;
+    causality, the sliding window, and the uncommitted cache tail are all
+    enforced against that position (f32 softmax, kernel-matching 0-output
+    normalization for fully-masked rows).
+    """
+    b, h, qs, d = q.shape
+    kh = k_pages.shape[2]
+    g = h // kh
+    k = paged_gather(k_pages, page_table)           # (B, T, KH, D)
+    v = paged_gather(v_pages, page_table)
+    t_len = k.shape[1]
+    qg = q.reshape(b, kh, g, qs, d)
+    s = jnp.einsum("bkgsd,btkd->bkgst", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = (lengths[:, None] - qs
+             + jnp.arange(qs)[None, :])             # (B, qs)
+    k_pos = jnp.arange(t_len)
+    mask = k_pos[None, None, :] <= q_pos[:, :, None]        # (B, qs, T)
+    if window is not None:
+        mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+    mask = mask[:, None, None]                      # (B, 1, 1, qs, T)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-37)
+    o = jnp.einsum("bkgst,btkd->bkgsd", (p / l).astype(v.dtype), v)
+    return o.reshape(b, h, qs, d)

@@ -37,6 +37,10 @@ DEFAULT_LOGICAL_RULES: dict[str, tuple] = {
     "batch": (("pod", "data"), "data"),
     "seq": (("pod", "data"), "data"),
     "kv_seq": (("pod", "data", "model"), ("data", "model"), "model"),
+    # paged KV pool (serving/cache.py layout="paged"): the page dim of
+    # k_pages/v_pages takes the split-KV role of kv_seq — pages of one
+    # sequence may land on different chips; GSPMD gathers via the table
+    "kv_pages": (("pod", "data", "model"), ("data", "model"), "model"),
     "vocab": ("model",),
     "embed": (None,),
     "heads": ("model",),

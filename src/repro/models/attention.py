@@ -25,6 +25,37 @@ from repro.models.layers import apply_norm, apply_rope, init_norm, softcap
 Params = dict
 NEG_INF = -2.3819763e38  # finite min-bf16-safe mask value
 
+# the paged flash-decode kernel is a single-q-block schedule (its whole
+# (g·q_len, D) q block + f32 accumulator live in VMEM): right for decode
+# steps of 1..few tokens, wrong for a cache-writing prefill over a long
+# prompt — those fall back to the dense-gather path (chunked paged
+# prefill is a recorded ROADMAP next step)
+PAGED_FLASH_MAX_Q = 8
+
+
+def _flash_engine_live(cfg: ModelConfig) -> bool:
+    """Does ``cfg.attn_impl`` select the Pallas flash engine right now?"""
+    from repro.kernels.tiled_matmul.ops import kernel_mode
+    return (cfg.attn_impl == "flash"
+            or (cfg.attn_impl == "auto"
+                and kernel_mode() in ("pallas", "pallas_interpret")))
+
+
+def _run_windowed(fn, cfg: ModelConfig, is_local):
+    """Invoke ``fn(window)`` under the layer's local/global flag.
+
+    Static flags pick one schedule at trace time; a traced per-layer flag
+    (the layer-stack scan) compiles both schedules once and selects at
+    run time with ``lax.cond``.
+    """
+    if cfg.sliding_window is None:
+        return fn(None)
+    if isinstance(is_local, (bool, int)):
+        return fn(cfg.sliding_window if is_local else None)
+    return jax.lax.cond(jnp.asarray(is_local, bool),
+                        lambda: fn(cfg.sliding_window),
+                        lambda: fn(None))
+
 
 def init_attention(key: jax.Array, cfg: ModelConfig, *,
                    cross: bool = False) -> Params:
@@ -62,7 +93,14 @@ def _mask_bias(q_pos, k_pos, *, causal: bool, window, is_local) -> jax.Array:
 
 def _attend_dense(q, k, v, q_pos, k_pos, *, scale, cap, causal, window,
                   is_local):
-    """q (B,S,K,G,hd); k,v (B,T,K,hd) → (B,S,K,G,hd).  Scores in f32."""
+    """q (B,S,K,G,hd); k,v (B,T,K,hd) → (B,S,K,G,hd).  Scores in f32.
+
+    ``q_pos`` may be (S,) (batch-synchronous) or (B, S) (per-sequence
+    decode positions — mixed-length batches); it is aligned to the
+    (B,K,G,S,T) score block so the mask broadcasts per sequence.
+    """
+    if jnp.ndim(q_pos) == 2:
+        q_pos = q_pos[:, None, None, :]        # (B,1,1,S) → bias (B,1,1,S,T)
     s = jnp.einsum("bskgh,btkh->bkgst", q, k,
                    preferred_element_type=jnp.float32) * scale
     s = softcap(s, cap)
@@ -141,18 +179,78 @@ def _attend_blockwise(q, k, v, q_offset, *, scale, cap, causal, window,
     return o[:, :s_len]
 
 
+def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
+                  page_table, is_local, scale, b, s):
+    """Paged-cache decode step: scatter new kv into pages, attend, project.
+
+    q (B,S,H,hd), k/v (B,S,K,hd) — already rope'd; cache (k_pages,
+    v_pages) each (P, page, K, hd); cache_pos (B,) per-sequence lengths
+    before the write.  Decode-sized steps (S ≤ ``PAGED_FLASH_MAX_Q``)
+    route through the paged flash-decode schedule under ``attn_impl`` ∈
+    {auto (Pallas live), flash}; longer steps (cache-writing prefill) and
+    ``attn_impl="jnp"`` gather the pages into a dense cache and reuse the
+    jnp decode path.
+    """
+    ck, cv = cache
+    page = ck.shape[1]
+    tok_pos = cache_pos[:, None] + jnp.arange(s)[None, :]       # (B, S)
+    pidx = jnp.take_along_axis(page_table, tok_pos // page, axis=1)
+    ck = ck.at[pidx, tok_pos % page].set(k.astype(ck.dtype))
+    cv = cv.at[pidx, tok_pos % page].set(v.astype(cv.dtype))
+    lengths = cache_pos + s
+
+    if s <= PAGED_FLASH_MAX_Q and _flash_engine_live(cfg):
+        from repro.kernels.flash_attention.ops import paged_decode_attention
+
+        def _pdec(window):
+            return paged_decode_attention(
+                q, ck, cv, page_table, lengths, scale=scale, window=window,
+                softcap=cfg.attn_logit_softcap)
+
+        o = _run_windowed(_pdec, cfg, is_local)
+    else:
+        from repro.kernels.flash_attention.ref import paged_gather
+        kh = cfg.n_kv_heads
+        g = cfg.n_heads // kh
+        kd = paged_gather(ck, page_table)                       # (B,T,K,hd)
+        vd = paged_gather(cv, page_table)
+        o = _attend_dense(q.reshape(b, s, kh, g, cfg.head_dim), kd, vd,
+                          tok_pos, jnp.arange(kd.shape[1]), scale=scale,
+                          cap=cfg.attn_logit_softcap, causal=True,
+                          window=cfg.sliding_window, is_local=is_local)
+
+    o = o.reshape(b, s, cfg.q_dim)
+    y = apply_linear(params["wo"], o, mode=cfg.quant_proj)
+    return y, (ck, cv)
+
+
 def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
                     positions: jax.Array,
                     is_local=False,
                     causal: bool = True,
                     memory: jax.Array | None = None,
                     cache: tuple[jax.Array, jax.Array] | None = None,
-                    cache_pos: jax.Array | None = None):
+                    cache_pos: jax.Array | None = None,
+                    page_table: jax.Array | None = None):
     """Self- or cross-attention.
 
     x: (B, S, D).  memory: (B, T, D) for cross-attention (no cache, no rope).
-    cache: (k, v) each (B, S_max, K, hd) — decode mode; new kv written at
-    ``cache_pos`` (scalar step index) and attention runs over the cache.
+
+    Decode mode (``cache`` given) supports both serving cache layouts:
+
+      * dense — cache (k, v) each (B, S_max, K, hd); ``cache_pos`` is a
+        scalar step index (batch-synchronous, seed behaviour) or a (B,)
+        int32 vector of per-sequence write positions (mixed-length
+        batches); new kv is written there and attention runs over the
+        cache with per-sequence causal masking.
+      * paged — ``page_table`` (B, max_pages) int32 is given and cache is
+        (k_pages, v_pages) each (P, page, K, hd); ``cache_pos`` (B,) holds
+        per-sequence lengths *before* this step.  New kv is scattered into
+        each sequence's pages and attention routes through the paged
+        flash-decode schedule (``kernels/flash_attention/decode.py``) when
+        ``cfg.attn_impl`` selects the flash engine, else through a dense
+        gather fallback.
+
     Returns (y, new_cache or None).
     """
     b, s, _ = x.shape
@@ -181,13 +279,26 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
         q = apply_rope(q, positions, cfg)
         k = apply_rope(k, positions, cfg)
 
+    if cache is not None and page_table is not None:
+        return _attend_paged(params, q, k, v, cfg, cache=cache,
+                             cache_pos=cache_pos, page_table=page_table,
+                             is_local=is_local, scale=scale, b=b, s=s)
+
     new_cache = None
     if cache is not None:
         ck, cv = cache
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, cache_pos, 0, 0))
+        if jnp.ndim(cache_pos) == 0:
+            # batch-synchronous write (seed behaviour): one shared position
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, cache_pos, 0, 0))
+        else:
+            # per-sequence write positions (mixed-length batches)
+            bidx = jnp.arange(b)[:, None]
+            tok_pos = cache_pos[:, None] + jnp.arange(s)[None, :]
+            ck = ck.at[bidx, tok_pos].set(k.astype(ck.dtype))
+            cv = cv.at[bidx, tok_pos].set(v.astype(cv.dtype))
         new_cache = (ck, cv)
         k, v = ck, cv
         k_pos = jnp.arange(k.shape[1])
@@ -227,12 +338,7 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
     # the no-cache case — including gemma2-style local layers: the kernel
     # masks the sliding window in-kernel and its block-sparse schedule only
     # streams the KV blocks the window exposes (kernels/flash_attention).
-    from repro.kernels.tiled_matmul.ops import kernel_mode
-    use_flash = use_blockwise and (
-        cfg.attn_impl == "flash"
-        or (cfg.attn_impl == "auto"
-            and kernel_mode() in ("pallas", "pallas_interpret")))
-    if use_flash:
+    if use_blockwise and _flash_engine_live(cfg):
         from repro.kernels.flash_attention.ops import flash_attention
         qf = q.reshape(b, s, kh * g, hd)
 
@@ -242,17 +348,7 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
                 softcap=cfg.attn_logit_softcap,
                 q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv)
 
-        if cfg.sliding_window is None:
-            o = _flash(None)
-        elif isinstance(is_local, (bool, int)):
-            o = _flash(cfg.sliding_window if is_local else None)
-        else:
-            # per-layer flag traced by the layer-stack scan: compile both
-            # schedules once, select at run time
-            o = jax.lax.cond(jnp.asarray(is_local, bool),
-                             lambda: _flash(cfg.sliding_window),
-                             lambda: _flash(None))
-        o = o.reshape(b, s, kh, g, hd)
+        o = _run_windowed(_flash, cfg, is_local).reshape(b, s, kh, g, hd)
     elif use_blockwise:
         o = _attend_blockwise(
             q, k, v, 0, scale=scale, cap=cfg.attn_logit_softcap,

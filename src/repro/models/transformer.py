@@ -11,8 +11,10 @@ One ``init_model`` / ``apply_model`` pair driven by ``ModelConfig``:
   * encoder-decoder (seamless-m4t) — bidirectional encoder over precomputed
     frame embeddings + causal decoder with cross-attention.
 
-Cache convention (decode):
-  {"k","v"}: (L, B, S_max, KVH, hd)     attention layers
+Cache convention (decode) — see serving/cache.py + docs/DESIGN.md:
+  dense:  {"k","v"}: (L, B, S_max, KVH, hd)     attention layers
+  paged:  {"k_pages","v_pages"}: (L, P, page, KVH, hd) page pools,
+          {"page_table"}: (B, max_pages) int32, {"seq_lens"}: (B,) int32
   {"shared_k","shared_v"}: (A, B, S_max, KVH, hd)   zamba2 shared block
   {"ssm_h"}: (L, B, H, P, N) f32; {"conv_x","conv_B","conv_C"} conv tails
 """
@@ -98,11 +100,12 @@ def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
 # Block apply
 # ===========================================================================
 def _decoder_block(p: Params, x, cfg: ModelConfig, *, positions, is_local,
-                   causal, cache_kv, cache_pos, memory):
+                   causal, cache_kv, cache_pos, memory, page_table=None):
     h = apply_norm(p["norm_attn"], x, cfg)
     a_out, new_kv = apply_attention(p["attn"], h, cfg, positions=positions,
                                     is_local=is_local, causal=causal,
-                                    cache=cache_kv, cache_pos=cache_pos)
+                                    cache=cache_kv, cache_pos=cache_pos,
+                                    page_table=page_table)
     # materialize the TP partial-sum reduction in bf16 BEFORE the (f32
     # internal) norm/residual — otherwise GSPMD hoists the all-reduce past
     # the upcast and moves 2× the bytes
@@ -153,6 +156,8 @@ def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
                   cache, cache_pos, memory):
     flags = _local_flags(cfg)
     decode = cache is not None
+    paged = decode and "k_pages" in cache
+    page_table = cache["page_table"] if paged else None
 
     def body(carry, xs):
         x, aux_sum = carry
@@ -164,7 +169,8 @@ def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
             cache_kv = None
         x, new_kv, aux = _decoder_block(
             lp, x, cfg, positions=positions, is_local=flag, causal=causal,
-            cache_kv=cache_kv, cache_pos=cache_pos, memory=memory)
+            cache_kv=cache_kv, cache_pos=cache_pos, memory=memory,
+            page_table=page_table)
         aux_sum = aux_sum + aux.get("load_balance_loss", 0.0)
         # sequence-sharded residual between blocks: the checkpointed carry
         # is 1/|model| sized (no-op when seq doesn't divide, e.g. decode)
@@ -174,13 +180,20 @@ def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
     if cfg.remat == "block":
         body = jax.checkpoint(body)
 
-    if decode:
+    if paged:
+        xs = (params["layers"], flags, cache["k_pages"], cache["v_pages"])
+    elif decode:
         xs = (params["layers"], flags, cache["k"], cache["v"])
     else:
         xs = (params["layers"], flags)
     (x, aux_sum), new_kvs = jax.lax.scan(body, (x, 0.0), xs)
     new_cache = None
-    if decode:
+    if paged:
+        # layer-independent page table rides along; seq_lens is stamped by
+        # apply_model (it knows how many tokens were committed)
+        new_cache = {"k_pages": new_kvs[0], "v_pages": new_kvs[1],
+                     "page_table": page_table}
+    elif decode:
         new_cache = {"k": new_kvs[0], "v": new_kvs[1]}
     return x, aux_sum, new_cache
 
@@ -280,6 +293,10 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     frontend_embeds: (B, P, D) vision-patch embeddings prepended (phi3v).
     encoder_frames: (B, T, D) audio-frame embeddings (seamless encoder in).
     memory: (B, T, D) precomputed encoder output (decode steps).
+    cache/cache_pos: decode state (see ``serving/cache.py`` layouts).
+    ``cache_pos`` is a scalar (batch-synchronous) or (B,) int32 vector of
+    per-sequence write positions; with a paged cache a scalar is
+    broadcast.  The paged new_cache carries ``seq_lens = cache_pos + S``.
     """
     x = embed_tokens(params["embed"], tokens, cfg)
     if frontend_embeds is not None and cache is None:
@@ -288,13 +305,22 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     b, s, _ = x.shape
     x = shard(x, "batch", "seq" if b == 1 else None, None)
 
+    paged = cache is not None and "k_pages" in cache
+    if paged and (cache_pos is None or jnp.ndim(cache_pos) == 0):
+        # paged writes scatter per sequence — normalize to (B,) positions
+        cache_pos = jnp.full((b,), 0 if cache_pos is None else cache_pos,
+                             jnp.int32)
     if positions is None:
-        positions = (jnp.arange(s) if cache is None
-                     else jnp.full((1,), cache_pos, jnp.int32))
+        if cache is None:
+            positions = jnp.arange(s)
+        elif jnp.ndim(cache_pos) == 0:
+            positions = cache_pos + jnp.arange(s)              # (S,)
+        else:
+            positions = (cache_pos[:, None]
+                         + jnp.arange(s)[None, :])             # (B, S)
     if cfg.pos_embedding == "sinusoidal":
-        x = x + sinusoidal_positions(positions, cfg.d_model
-                                     ).astype(x.dtype)[None] \
-            if positions.ndim == 1 else x
+        pe = sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+        x = x + (pe[None] if positions.ndim == 1 else pe)
 
     aux = {"load_balance_loss": jnp.zeros((), jnp.float32)}
 
@@ -310,6 +336,8 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
             params, x, cfg, positions=positions, causal=True,
             cache=cache, cache_pos=cache_pos, memory=memory)
         aux["load_balance_loss"] = lb
+        if paged:
+            new_cache["seq_lens"] = cache_pos + s
 
     x = apply_norm(params["final_norm"], x, cfg)
     logits = unembed(params["embed"], x, cfg, params.get("lm_head"))

@@ -1,22 +1,43 @@
 """Decode-state (KV / SSM) cache: construction + sharding specs.
 
-Cache layout (see models/transformer.py):
+Two attention-cache layouts behind one ``init_cache`` API (see
+``docs/DESIGN.md`` §1–2 for the full serving architecture):
+
+**dense** (seed layout) — one rectangular buffer per tensor:
   attention archs:  k/v (L, B, S_max, KVH, hd)
   hybrid (zamba2):  ssm_h (L,B,H,P,N) f32, conv_* tails, plus
                     shared_k/v (A, B, S_max, KVH, hd) for the A application
                     sites of the parameter-shared block
   ssm (mamba2):     ssm state + conv tails only — O(1) in context length.
 
-Sharding policy (DESIGN.md §3): batch over the DP axes; KV heads over
-`model` when divisible, otherwise the **sequence** dim of the cache goes to
-`model` (split-KV decoding — GSPMD inserts the partial-softmax
-all-reduces).  ``cache_logical_axes`` encodes that choice per array.
+**paged** — fixed-size KV pages in a shared pool plus per-sequence page
+tables (attention families only; the SSM state is already O(1)):
+  k_pages/v_pages  (L, n_pages, page_size, KVH, hd)
+  page_table       (B, max_pages) int32 — physical page id of logical page
+                   j of sequence b; rows own disjoint page sets
+  seq_lens         (B,) int32 — tokens currently committed per sequence
+
+Page-table invariants (``docs/DESIGN.md`` §2): entries are valid pool
+indices; distinct sequences never share a physical page; token position
+``p`` of sequence ``b`` lives at ``(page_table[b, p // page_size],
+p % page_size)``; only the first ``seq_lens[b]`` positions hold committed
+data (later slots may hold prefill-padding garbage that decode masks until
+it overwrites them).
+
+Sharding policy (``docs/DESIGN.md`` §3): batch over the DP axes; KV heads
+over ``model`` when divisible, otherwise the **sequence** dim of the dense
+cache — or the **page-pool** dim of the paged cache — goes to ``model``
+(split-KV decoding — GSPMD inserts the partial-softmax all-reduces).
+``cache_logical_axes`` encodes that choice per array.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.tiling import ceil_div
 from repro.models.config import ModelConfig
+
+DEFAULT_PAGE_SIZE = 64
 
 
 def n_shared_sites(cfg: ModelConfig) -> int:
@@ -25,10 +46,60 @@ def n_shared_sites(cfg: ModelConfig) -> int:
     return cfg.n_layers // cfg.shared_attn_every
 
 
+def default_page_table(batch: int, max_pages: int,
+                       alloc: str = "contiguous") -> jnp.ndarray:
+    """(B, max_pages) int32 page table over a ``batch * max_pages`` pool.
+
+    ``alloc`` picks the physical placement (both satisfy the disjointness
+    invariant; results must be identical — the kernel only ever addresses
+    pages through the table):
+
+      * ``"contiguous"`` — sequence ``b`` owns pages ``[b*max_pages,
+        (b+1)*max_pages)`` in order (the dense layout, re-expressed).
+      * ``"striped"`` — logical page ``j`` of sequence ``b`` is physical
+        page ``j * batch + b``: consecutive logical pages of one sequence
+        are scattered across the pool, exercising true indirection.
+    """
+    b = jnp.arange(batch, dtype=jnp.int32)[:, None]
+    j = jnp.arange(max_pages, dtype=jnp.int32)[None, :]
+    if alloc == "contiguous":
+        return b * max_pages + j
+    if alloc == "striped":
+        return j * batch + b
+    raise ValueError(f"unknown page allocation {alloc!r}")
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> dict:
+               dtype=jnp.bfloat16, *, layout: str = "dense",
+               page_size: int = DEFAULT_PAGE_SIZE,
+               alloc: str = "contiguous") -> dict:
+    """Zero-initialised decode cache for ``batch`` sequences of up to
+    ``max_len`` tokens.
+
+    Args:
+      cfg: model config (family decides which state tensors exist).
+      batch: number of concurrent sequences B.
+      max_len: maximum context length S_max a sequence may reach.
+      dtype: KV storage dtype (bf16 serving default; SSM state stays f32).
+      layout: ``"dense"`` (seed rectangular buffers) or ``"paged"``
+        (fixed-size KV pages + per-sequence page tables; attention
+        families only).
+      page_size: tokens per KV page (paged layout only).
+      alloc: initial physical page placement, see ``default_page_table``.
+
+    Returns a dict of arrays (shapes in the module docstring).  The paged
+    dict additionally carries ``page_table`` (B, max_pages) int32 and
+    ``seq_lens`` (B,) int32 so the whole decode state is one donatable
+    pytree.
+    """
+    if layout not in ("dense", "paged"):
+        raise ValueError(f"unknown cache layout {layout!r}")
     cache: dict = {}
     if cfg.family in ("ssm", "hybrid"):
+        if layout == "paged":
+            raise ValueError(
+                "paged layout applies to attention-family KV caches; "
+                f"family {cfg.family!r} keeps its O(1) SSM state dense")
         l, h = cfg.n_layers, cfg.ssm_n_heads
         p, n = cfg.ssm_head_dim, cfg.ssm_state
         k = cfg.ssm_conv - 1
@@ -41,6 +112,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
             cache["shared_k"] = jnp.zeros(
                 (sites, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)
             cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+    elif layout == "paged":
+        max_pages = ceil_div(max_len, page_size)
+        n_pages = batch * max_pages
+        cache["k_pages"] = jnp.zeros(
+            (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+            dtype)
+        cache["v_pages"] = jnp.zeros_like(cache["k_pages"])
+        cache["page_table"] = default_page_table(batch, max_pages, alloc)
+        cache["seq_lens"] = jnp.zeros((batch,), jnp.int32)
     else:
         cache["k"] = jnp.zeros(
             (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
@@ -49,8 +129,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
-def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto") -> dict:
-    """Logical axes per cache array; ``kv_shard``: auto|heads|seq."""
+def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
+                       layout: str = "dense") -> dict:
+    """Logical axes per cache array (``docs/DESIGN.md`` §3).
+
+    ``kv_shard``: ``auto | heads | seq`` — ``seq`` means the dense cache's
+    sequence dim, or the paged pool's page dim, goes to ``model``.
+    """
     axes: dict = {}
     if cfg.family in ("ssm", "hybrid"):
         axes["ssm_h"] = (None, "batch", "ssm_heads", None, None)
@@ -61,6 +146,16 @@ def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto") -> dict:
             kv = _kv_axes(cfg, kv_shard)
             axes["shared_k"] = kv
             axes["shared_v"] = kv
+    elif layout == "paged":
+        kv = _kv_axes(cfg, kv_shard)
+        # (L, P, page, KVH, hd): the per-sequence dims B/S are gone — the
+        # pool's page dim takes the kv_seq split, heads keep theirs
+        paged = (None, "kv_pages" if kv[2] == "kv_seq" else None,
+                 None, kv[3], None)
+        axes["k_pages"] = paged
+        axes["v_pages"] = paged
+        axes["page_table"] = ("batch", None)
+        axes["seq_lens"] = ("batch",)
     else:
         kv = _kv_axes(cfg, kv_shard)
         axes["k"] = kv

@@ -1,9 +1,23 @@
-"""Serving steps: prefill and single-token decode (``serve_step``).
+"""Serving engine: prefill → decode handoff and the batched decode loop.
 
-``serve_step`` is what the decode_32k / long_500k dry-run cells lower: one
-new token against a cache of ``seq_len``.  ``prefill`` (no cache) is what
-prefill_32k lowers.  Batched request serving (the end-to-end example) loops
-``serve_step`` under ``jax.jit`` with donated cache buffers.
+The serving architecture is documented in ``docs/DESIGN.md``; in short:
+
+  * ``prefill`` runs the whole (right-padded) prompt batch through the
+    cache-writing path once, committing prompt KV into the cache (dense
+    rows or paged pools) and returning each sequence's next-token logits
+    at its *own* last prompt position — a batch may mix prompt lengths.
+  * ``serve_step`` is one decode step: B new tokens against per-sequence
+    contexts.  It is what the decode_32k / long_500k dry-run cells lower.
+  * ``greedy_decode`` is the batched serving loop: a single jitted
+    ``lax.scan`` over decode steps with the cache donated into the loop —
+    one compile, no per-token Python dispatch, buffers updated in place.
+
+All three take the cache dict from ``serving/cache.init_cache`` and work
+with both layouts; per-sequence positions (``pos`` as a (B,) int32
+vector) are what make mixed-length batches exact — prefill padding
+garbage beyond a short prompt is masked until the decode loop overwrites
+it, one slot per step (the overwrite-before-visible invariant,
+``docs/DESIGN.md`` §2).
 """
 from __future__ import annotations
 
@@ -20,41 +34,137 @@ Params = dict
 
 def prefill_step(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
                  frontend_embeds=None, encoder_frames=None):
-    """Forward pass producing logits for a prompt (no score materialization
-    beyond the blockwise chunks).  Returns (logits, aux)."""
+    """Cache-less forward pass producing logits for a prompt (no score
+    materialization beyond the blockwise chunks).  Returns (logits, aux).
+    This is the throughput-shape entry the prefill_32k dry-run cell
+    lowers; the serving handoff that also *commits* KV is ``prefill``."""
     logits, _, aux = apply_model(params, tokens, cfg,
                                  frontend_embeds=frontend_embeds,
                                  encoder_frames=encoder_frames)
     return logits, aux
 
 
-def serve_step(params: Params, cache: dict, tokens: jax.Array,
-               pos: jax.Array, cfg: ModelConfig, *,
-               memory: jax.Array | None = None):
-    """One decode step.  tokens (B, 1); pos scalar int32 (batch-synchronous).
+def prefill(params: Params, cache: dict, prompts: jax.Array,
+            prompt_lens: jax.Array, cfg: ModelConfig, *,
+            memory: jax.Array | None = None):
+    """Prefill → decode handoff: commit prompt KV, return first logits.
 
-    Returns (logits (B, 1, V), new_cache).
+    prompts (B, S_pad) int32, right-padded to the longest prompt;
+    prompt_lens (B,) int32 true lengths (may differ per sequence).  The
+    whole padded batch runs through the cache-writing path at positions
+    0..S_pad-1, so every layer's K/V lands in the cache (pages for the
+    paged layout).  Slots past ``prompt_lens[b]`` hold padding garbage
+    that decode masks per sequence until it overwrites them.
+
+    Returns (next_logits (B, V) — logits at each sequence's last real
+    prompt token — and the updated cache with ``seq_lens = prompt_lens``
+    for the paged layout).
+
+    Scaling note: this one-pass handoff attends *densely* over the cache
+    (paged steps past ``attention.PAGED_FLASH_MAX_Q`` take the gather
+    fallback) — right for serving-batch prompt sizes; 32k-class prompts
+    need the chunked prefill recorded as a ROADMAP next step, or the
+    cache-less ``prefill_step`` when KV need not be committed.
     """
+    b, s_pad = prompts.shape
+    if "k_pages" in cache:
+        capacity = cache["page_table"].shape[1] * cache["k_pages"].shape[2]
+    else:
+        capacity = cache["k"].shape[2] if "k" in cache else s_pad
+    if s_pad > capacity:
+        # past capacity the paged scatter would clamp to the last page and
+        # silently corrupt it — fail loudly while shapes are still static
+        raise ValueError(f"prompt width {s_pad} exceeds cache capacity "
+                         f"{capacity} tokens")
+    pos0 = jnp.zeros((b,), jnp.int32)
+    logits, cache, _ = apply_model(params, prompts, cfg, cache=cache,
+                                   cache_pos=pos0, memory=memory)
+    if "seq_lens" in cache:
+        # padded tails were written but are NOT committed: visibility is
+        # governed by seq_lens, and decode overwrites them slot by slot.
+        # (copy, not alias: the cache is routinely donated downstream and
+        # must not share a buffer with the caller's prompt_lens)
+        cache["seq_lens"] = jnp.array(prompt_lens, jnp.int32, copy=True)
+    next_logits = jnp.take_along_axis(
+        logits, (jnp.asarray(prompt_lens, jnp.int32) - 1)[:, None, None],
+        axis=1)[:, 0]
+    return next_logits, cache
+
+
+def serve_step(params: Params, cache: dict, tokens: jax.Array,
+               pos: jax.Array | None, cfg: ModelConfig, *,
+               memory: jax.Array | None = None):
+    """One decode step.
+
+    tokens (B, 1) int32; pos is a scalar int32 (batch-synchronous, seed
+    behaviour), a (B,) int32 vector of per-sequence lengths (mixed-length
+    batches), or None to read the paged cache's own ``seq_lens``.
+
+    Returns (logits (B, 1, V) f32, new_cache).  Attention lowers through
+    the layout-matching schedule: dense caches use the masked dense path;
+    paged caches use the paged flash-decode page walk when ``attn_impl``
+    selects the flash engine (``auto`` + live Pallas kernels, or
+    ``flash``), else the dense gather fallback.
+    """
+    if pos is None:
+        if "seq_lens" not in cache:
+            raise ValueError("pos=None requires a paged cache carrying "
+                             "seq_lens; dense caches need an explicit pos")
+        pos = cache["seq_lens"]
     logits, new_cache, _ = apply_model(params, tokens, cfg, cache=cache,
                                        cache_pos=pos, memory=memory)
     return logits, new_cache
 
 
 def greedy_decode(params: Params, cache: dict, first_token: jax.Array,
-                  start_pos: int, n_steps: int, cfg: ModelConfig, *,
+                  start_pos, n_steps: int, cfg: ModelConfig, *,
                   memory=None):
-    """Greedy autoregressive loop (example/benchmark driver)."""
+    """Batched greedy serving loop: one jitted ``lax.scan`` over steps.
 
-    @functools.partial(jax.jit, donate_argnums=(1,))
-    def step(tok, cache, pos):
+    first_token (B, 1) int32; start_pos is an int (batch-synchronous), a
+    (B,) int32 vector of per-sequence lengths, or None to start from the
+    paged cache's ``seq_lens``.  The cache is donated into the scan, so
+    decode state is updated in place across all ``n_steps`` with a single
+    compile and no per-token Python dispatch.
+
+    Returns (tokens (B, n_steps + 1) — ``first_token`` followed by the
+    greedy continuations — and the final cache).
+    """
+    from_cache_lens = start_pos is None
+    if from_cache_lens and "seq_lens" not in cache:
+        raise ValueError("start_pos=None requires a paged cache")
+    from repro.kernels.tiled_matmul.ops import kernel_mode
+    pos_arg = jnp.asarray(0 if from_cache_lens else start_pos, jnp.int32)
+    toks, cache = _greedy_run(params, cache, first_token, pos_arg, memory,
+                              cfg, n_steps, from_cache_lens, kernel_mode())
+    # (n_steps, B, 1) → (B, n_steps), oldest first
+    seq = jnp.concatenate([first_token, jnp.swapaxes(toks[..., 0], 0, 1)],
+                          axis=1)
+    return seq, cache
+
+
+@functools.partial(jax.jit, donate_argnums=(1,),
+                   static_argnames=("cfg", "n_steps", "from_cache_lens",
+                                    "mode"))
+def _greedy_run(params, cache, tok, pos_arg, memory, cfg: ModelConfig,
+                n_steps: int, from_cache_lens: bool, mode: str):
+    """Module-level jitted scan so repeated ``greedy_decode`` calls hit
+    the jit cache (a closure-jitted loop would re-trace — and re-compile
+    the whole n_steps scan — on every call).  ``mode`` (the live
+    ``kernel_mode()``) only keys the cache: attention routing reads the
+    env at trace time, so without it a REPRO_KERNELS change mid-process
+    would silently replay the previously-traced path."""
+
+    def step(carry, _):
+        cache, tok, pos = carry
         logits, cache = serve_step(params, cache, tok, pos, cfg,
                                    memory=memory)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(tok.dtype)
-        return nxt, cache
+        return (cache, nxt, pos + 1), nxt
 
-    toks = [first_token]
-    for i in range(n_steps):
-        nxt, cache = step(toks[-1], cache, jnp.asarray(start_pos + i,
-                                                       jnp.int32))
-        toks.append(nxt)
-    return jnp.concatenate(toks, axis=1), cache
+    # read start positions from the donated cache itself — passing
+    # seq_lens as a separate operand would alias the donated buffer
+    pos0 = cache["seq_lens"] if from_cache_lens else pos_arg
+    (cache, _, _), toks = jax.lax.scan(step, (cache, tok, pos0),
+                                       length=n_steps)
+    return toks, cache

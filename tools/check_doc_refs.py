@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Fail on dangling intra-repo doc references.
+
+Scans the repo's Markdown files for path-like references (inline code
+spans, link targets) and the Python sources for ``*.md`` citations in
+comments/docstrings (e.g. the ``docs/DESIGN.md §3`` citation in
+``serving/cache.py``), then checks that every referenced file actually
+exists.  Documentation that names a file that was never written — or was
+renamed away — fails CI instead of rotting silently.
+
+Resolution: a reference resolves if it exists relative to the repo root,
+the referencing file's directory, or the source roots (``src``,
+``src/repro``, ``docs`` — so ``models/attention.py`` in ROADMAP prose and
+``DESIGN.md`` in a docstring both resolve).  ``:line`` suffixes and
+``#anchors`` are stripped; tokens containing shell/home/glob syntax
+(``$``, ``~``, ``*``, spaces) are skipped, as are generated artifacts
+(e.g. ``BENCH_ci.json``, which only exists inside a CI run).
+
+Run: ``python tools/check_doc_refs.py`` (exit 1 + a listing on failure).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# directories whose .md / .py files are scanned for references
+MD_DIRS = [ROOT, ROOT / "docs"]
+PY_DIRS = [ROOT / "src", ROOT / "tests", ROOT / "benchmarks",
+           ROOT / "examples", ROOT / "tools"]
+
+# bases a reference may resolve against (beyond the referencing file's dir)
+BASES = [ROOT, ROOT / "src", ROOT / "src" / "repro", ROOT / "docs"]
+
+# extensions that count as checkable file references
+CHECK_EXTS = {".md", ".py", ".json", ".yml", ".yaml", ".txt", ".toml"}
+
+# generated / out-of-repo artifacts named in docs but not committed:
+# BENCH_ci.json + tune caches are CI/run outputs; EXPERIMENTS.md and
+# experiments/tables.md are the roofline report targets produced by
+# repro.roofline.make_report on real hardware
+ALLOWLIST = {"BENCH_ci.json", "gemm_tune.json", "tune.json",
+             "scheduled_tasks.json", "EXPERIMENTS.md", "tables.md"}
+
+# inline code spans and markdown link targets
+MD_TOKEN = re.compile(r"`([^`\n]+)`|\]\(([^)\s]+)\)")
+# *.md citations anywhere in python source (docstrings/comments)
+PY_MD_REF = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.md\b")
+PATHLIKE = re.compile(r"^[A-Za-z0-9_.][A-Za-z0-9_./-]*$")
+
+
+def _candidate(tok: str) -> str | None:
+    """Normalize a token to a checkable repo path, or None to skip."""
+    tok = tok.strip().rstrip(".,;:")
+    tok = tok.split("#", 1)[0]                      # markdown anchors
+    tok = re.sub(r":\d+(-\d+)?$", "", tok)          # file.py:10 suffixes
+    if not tok or not PATHLIKE.match(tok):
+        return None                     # $VAR, ~/…, globs, URLs (":"), prose
+    if tok.startswith("./"):
+        tok = tok[2:]
+    suffix = pathlib.PurePath(tok).suffix
+    if suffix not in CHECK_EXTS:
+        return None
+    if "/" not in tok and suffix not in (".md",):
+        return None                                 # bare non-md basenames
+    if pathlib.PurePath(tok).name in ALLOWLIST:
+        return None
+    return tok
+
+
+def _resolves(tok: str, from_dir: pathlib.Path) -> bool:
+    for base in [from_dir, *BASES]:
+        p = base / tok
+        if p.exists():
+            return True
+    return False
+
+
+def _md_tokens(text: str):
+    for m in MD_TOKEN.finditer(text):
+        span = m.group(1) or m.group(2)
+        # an inline span may hold prose — split on whitespace, keep paths
+        for part in span.split():
+            yield part
+
+
+def main() -> int:
+    failures: list[tuple[str, str]] = []
+    seen: set[tuple[str, str]] = set()
+
+    md_files = [p for d in MD_DIRS if d.is_dir() for p in d.glob("*.md")]
+    py_files = [p for d in PY_DIRS if d.is_dir()
+                for p in d.rglob("*.py") if "__pycache__" not in p.parts]
+
+    for path in md_files:
+        for raw in _md_tokens(path.read_text(errors="replace")):
+            tok = _candidate(raw)
+            if tok and not _resolves(tok, path.parent):
+                key = (str(path.relative_to(ROOT)), tok)
+                if key not in seen:
+                    seen.add(key)
+                    failures.append(key)
+
+    for path in py_files:
+        for m in PY_MD_REF.finditer(path.read_text(errors="replace")):
+            tok = _candidate(m.group(0))
+            if tok and not _resolves(tok, path.parent):
+                key = (str(path.relative_to(ROOT)), tok)
+                if key not in seen:
+                    seen.add(key)
+                    failures.append(key)
+
+    if failures:
+        print(f"{len(failures)} dangling doc reference(s):")
+        for src, tok in sorted(failures):
+            print(f"  {src}: {tok!r} does not resolve")
+        return 1
+    print(f"doc references OK ({len(md_files)} md, {len(py_files)} py "
+          "files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
