@@ -10,6 +10,8 @@
   flash_attention   — beyond-paper: block-sparse KV schedule counters
   decode            — beyond-paper: paged-KV decode engine (ms/token,
                       pages touched dense vs paged)
+  serving           — beyond-paper: continuous vs static batching under
+                      a mixed-arrival trace (tok/s, pool occupancy)
 
 Host wall-times are ordering-only (no TPU in this container); the graded
 performance numbers are the dry-run roofline terms in EXPERIMENTS.md.
@@ -29,6 +31,7 @@ MODULES = [
     "persistence",
     "flash_attention",
     "decode",
+    "serving",
 ]
 
 

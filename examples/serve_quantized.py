@@ -1,76 +1,98 @@
-"""Batched int8 serving on the paged-KV decode engine.
+"""Continuously-batched int8 serving on the paged-KV engine.
 
-    PYTHONPATH=src python examples/serve_quantized.py --tokens 16 \
-        [--layout paged|dense] [--page-size 16]
+    PYTHONPATH=src python examples/serve_quantized.py --requests 6 \
+        [--slots 3] [--pool-pages 40] [--page-size 8] [--no-share]
 
-The paper's deployment story end-to-end: offline weight quantization →
-dynamic activation quantization per step → int8 GEMMs for every
-projection → dequant epilogue; KV cache in bf16.  Serving runs through
-the engine's prefill → decode handoff (``serving/engine.py``): one
-cache-writing prefill over the whole (mixed-length) prompt batch, then a
-single jitted ``lax.scan`` greedy loop with donated cache buffers — under
-``--layout paged`` the KV lives in fixed-size pages behind per-sequence
-page tables and decode walks only occupied pages (docs/DESIGN.md).
+The paper's deployment story, serving-shaped: offline weight
+quantization → dynamic activation quantization per step → int8 GEMMs for
+every projection → dequant epilogue; KV cache in bf16 **pages** managed
+by the free-list allocator (``serving/allocator.py``).  Requests arrive
+*mid-stream*: the scheduler (``serving/scheduler.py``) admits them
+whenever a batch slot and enough pool pages are free (prompts sharing a
+prefix with a live sequence alias its prefix pages instead of
+recomputing them), steps the whole live batch through one jitted decode
+body per tick, and retires finished sequences so their pages are
+visibly recycled — watch the ``pool`` column fall as sequences finish
+and rise as the queue drains into the freed pages (docs/DESIGN.md §4).
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.quantize_params import quantize_model_params
 from repro.models.transformer import init_model
-from repro.serving.cache import init_cache
-from repro.serving.engine import greedy_decode, prefill
+from repro.serving.scheduler import Scheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_5_3b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--layout", default="paged", choices=["dense", "paged"])
-    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical page pool (default: slots*max_pages; "
+                         "smaller values exercise admission control)")
+    ap.add_argument("--no-share", action="store_true",
+                    help="disable prefix-sharing admissions")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(quant_proj="w8a8")
     params = quantize_model_params(
         init_model(jax.random.PRNGKey(0), cfg.replace(quant_proj="none")))
-    max_len = args.prompt_len + args.tokens + 1
-    cache = init_cache(cfg, args.batch, max_len=max_len, layout=args.layout,
-                       page_size=args.page_size)
+    sched = Scheduler(params, cfg, slots=args.slots, max_len=args.max_len,
+                      page_size=args.page_size, pool_pages=args.pool_pages,
+                      share_prefix=not args.no_share, bucket=8)
 
-    # mixed-length prompt batch: sequence b keeps max(prompt_len - 2b, 4)
-    # tokens of the right-padded prompt
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    prompt_lens = jnp.clip(
-        args.prompt_len - jnp.arange(args.batch, dtype=jnp.int32) * 2,
-        4, args.prompt_len)
+    # mixed-length prompts; every third one reuses a long prefix of the
+    # first (those admissions fork its pages instead of recomputing)
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab_size, args.prompt_len)
+    trace = []
+    for i in range(args.requests):
+        p_len = max(4, args.prompt_len - 2 * (i % args.slots))
+        if i % 3 == 2:
+            prompt = np.concatenate(
+                [base[: p_len - 2], rng.integers(0, cfg.vocab_size, 2)])
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, p_len)
+        arrival = i  # one new request per tick: genuinely mid-stream
+        trace.append((arrival, prompt.astype(np.int32),
+                      max(2, args.tokens - i)))
 
+    print(f"arch={cfg.name} slots={args.slots} page={args.page_size} "
+          f"pool={sched.pool_occupancy()[1]} pages "
+          f"share_prefix={not args.no_share}")
+    print(f"{'tick':>4} {'arrive':>6} {'live':>4} {'queue':>5} "
+          f"{'pool':>9} {'finished this tick'}")
     t0 = time.perf_counter()
-    next_logits, cache = prefill(params, cache, prompts, prompt_lens, cfg)
-    first = jnp.argmax(next_logits, axis=-1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(first)
-    t_prefill = time.perf_counter() - t0
+    tick, pending = 0, sorted(trace, key=lambda r: r[0])
+    while pending or sched.queue or sched.n_active:
+        arrived = []
+        while pending and pending[0][0] <= tick:
+            _, prompt, budget = pending.pop(0)
+            arrived.append(sched.submit(prompt, budget))
+        done = sched.step()
+        used, total = sched.pool_occupancy()
+        print(f"{tick:>4} {str(arrived or ''):>6} {sched.n_active:>4} "
+              f"{len(sched.queue):>5} {used:>4}/{total:<4} "
+              f"{done or ''}")
+        tick += 1
+    sec = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    start = prompt_lens if args.layout == "dense" else None
-    out, cache = greedy_decode(params, cache, first, start, args.tokens,
-                               cfg)
-    jax.block_until_ready(out)
-    t_decode = time.perf_counter() - t0
-
-    tps = args.batch * args.tokens / t_decode
-    print(f"arch={cfg.name} batch={args.batch} layout={args.layout} "
-          f"prompt_lens={prompt_lens.tolist()}")
-    print(f"prefill {args.prompt_len} tok: {t_prefill:.2f}s   "
-          f"decode {args.tokens} tok: {t_decode:.2f}s "
-          f"({tps:.1f} tok/s host-CPU)")
-    print("sample:", out[0].tolist())
+    n_tokens = sum(len(v) for v in sched.finished.values())
+    print(f"\n{len(sched.finished)} requests, {n_tokens} tokens in "
+          f"{sec:.2f}s ({n_tokens / sec:.1f} tok/s host-CPU), "
+          f"peak pool occupancy "
+          f"{max(sched.occupancy_log)}/{sched.pool_occupancy()[1]}")
+    for rid in sorted(sched.finished)[:3]:
+        print(f"request {rid}: {sched.finished[rid].tolist()}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
-"""Pallas TPU kernel: paged-KV flash decode (single-query flash attention).
+"""Pallas TPU kernel: paged-KV flash attention (decode + chunked prefill).
 
-Decode-side companion of ``kernel.py``'s prefill engine, extending the
+Serving-side companion of ``kernel.py``'s prefill engine, extending the
 same schedule vocabulary to the serving cache: instead of a rectangular
 ``(B, KH, T, D)`` KV tensor, KV lives in a **page pool** ``(P, page, KH,
 D)`` addressed through a per-sequence **page table** — and the KV sweep
@@ -19,25 +19,36 @@ walks only the pages a sequence actually occupies:
     window), but the per-sequence bounds ``[j_lo, j_hi]`` are *dynamic*,
     read from ``lengths``: a 300-token sequence in a 4k-page-table batch
     streams ceil(300/page) pages, not 4k/page.
-  * **Sliding-window page pruning** — a window of W tokens bounds the
-    visible span to ``q_len + W - 1`` tokens, i.e. at most
-    ``ceil((q_len + W - 1)/page) + 1`` pages, independent of context
+  * **Multi-query-row q blocks** — the q extent is chunked like the
+    prefill kernel's (grid dim ``num_q_blocks``, ``q_chunk`` rows per
+    block), and each block's page range is bounded by *its own* causal
+    horizon: block ``i`` of a cache-writing prefill chunk walks pages
+    ``[j_lo(i), (base + (i+1)·q_chunk - 1) // page]`` only.  ``q_len``
+    is 1 for plain decode (one block) and a whole prompt chunk for the
+    engine's chunked paged prefill (``serving/engine.py``) — the path
+    that used to fall back to a dense gather past
+    ``attention.PAGED_FLASH_MAX_Q``.
+  * **Sliding-window page pruning** — a window of W tokens bounds each
+    q block's visible span to ``q_chunk + W - 1`` tokens, i.e. at most
+    ``ceil((q_chunk + W - 1)/page) + 1`` pages, independent of context
     length; ``j_lo`` starts the walk at the window's first page.
-  * **GQA-native grouping** — the grid is ``(B · KH, steps)``: each KV
-    head's page stream is fetched **once** and consumed by all ``g = H //
-    KH`` query heads of its group, laid out as rows of one
-    ``(g · q_len, D)`` q block (the decode analogue of the prefill
+  * **GQA-native grouping** — the leading grid dim is ``B · KH``: each
+    KV head's page stream is fetched **once** and consumed by all ``g =
+    H // KH`` query heads of its group, laid out as rows of one
+    ``(g · q_chunk, D)`` q block (the decode analogue of the prefill
     kernel's index-map broadcast).
   * **In-kernel masking** — causality against the per-row position
-    ``ctx - q_len + (row mod q_len)`` and the window bound are fused
-    broadcasted-iota compares, exactly the prefill kernel's machinery;
-    the partially-filled last page is masked by the same compare (and the
-    page's undefined V tail is zeroed before the PV product).
+    ``base + i·q_chunk + (row mod q_chunk)`` (``base = ctx - q_len``)
+    and the window bound are fused broadcasted-iota compares, exactly the
+    prefill kernel's machinery; the partially-filled last page is masked
+    by the same compare (and the page's undefined V tail is zeroed
+    before the PV product).  Partial q chunks are native: out-of-range
+    rows produce row-local garbage that Pallas drops at the
+    out-of-range output store.
 
-Grid (n, jj): n = B·KH flat KV-head index, jj the schedule-relative page
-step, innermost; VMEM scratch carries (acc f32 (g·q_len, D), m, l) across
-jj.  ``q_len`` is 1 for plain decode and may be a small number for
-speculative / chunked verification steps.
+Grid (n, i, jj): n = B·KH flat KV-head index, i the q block, jj the
+schedule-relative page step, innermost; VMEM scratch carries (acc f32
+(g·q_chunk, D), m, l) across jj and re-initializes per (n, i).
 """
 from __future__ import annotations
 
@@ -59,13 +70,15 @@ __all__ = ["FlashDecodeSchedule", "flash_decode_schedule",
 
 @dataclasses.dataclass(frozen=True)
 class FlashDecodeSchedule:
-    """Static plan for one paged decode launch.
+    """Static plan for one paged attention launch.
 
-    ``max_steps`` is the launched KV-grid extent (pages per sequence the
+    ``max_steps`` is the launched KV-grid extent (pages per q block the
     sweep *budgets* for); the pages actually streamed are the dynamic
-    per-sequence ``[j_lo, j_hi]`` ranges — ``pages_touched`` counts them
-    for a concrete batch of lengths.  ``max_steps < max_pages`` whenever
-    the sliding window prunes the walk.
+    per-(sequence, block) ``[j_lo, j_hi]`` ranges — ``pages_touched``
+    counts them for a concrete batch of lengths.  ``max_steps <
+    max_pages`` whenever the sliding window prunes the walk.  ``q_len``
+    is the total new rows per sequence, processed as ``num_q_blocks``
+    blocks of ``q_chunk`` rows (one block for plain decode).
     """
 
     page_size: int
@@ -73,62 +86,81 @@ class FlashDecodeSchedule:
     q_len: int
     window: int | None
     max_steps: int
+    q_chunk: int = 1
+    num_q_blocks: int = 1
 
 
 def flash_decode_schedule(max_pages: int, page_size: int, *,
                           q_len: int = 1,
-                          window: int | None = None) -> FlashDecodeSchedule:
-    """Plan the paged KV sweep for decode.
+                          window: int | None = None,
+                          q_chunk: int | None = None) -> FlashDecodeSchedule:
+    """Plan the paged KV sweep for a decode / chunked-prefill step.
 
     Args:
       max_pages: page-table width (logical page budget per sequence).
       page_size: tokens per page.
-      q_len: new tokens attended per step (1 for plain decode).
+      q_len: new tokens attended per step (1 for plain decode; the
+        prompt-chunk size for chunked paged prefill).
       window: sliding-window size in tokens, or None for global layers.
+      q_chunk: q rows per block (default: all of ``q_len`` in one block
+        — right for decode-sized steps; chunked prefill passes a fixed
+        block size so VMEM holds ``g · q_chunk`` rows, not the chunk).
 
-    The launched extent is ``max_pages`` for global layers; a window
-    bounds the visible token span to ``q_len + window - 1`` and with it
-    the page span to ``ceil(span / page_size) + 1`` (the +1 covers an
-    unaligned window straddling one extra page boundary).
+    The launched KV extent is ``max_pages`` for global layers; a window
+    bounds each q block's visible token span to ``q_chunk + window - 1``
+    and with it the page span to ``ceil(span / page_size) + 1`` (the +1
+    covers an unaligned window straddling one extra page boundary).
     """
     assert max_pages >= 1 and page_size >= 1 and q_len >= 1
+    q_chunk = min(q_chunk or q_len, q_len)
+    num_q_blocks = ceil_div(q_len, q_chunk)
     max_steps = max_pages
     if window is not None:
-        span = q_len + window - 1
+        span = q_chunk + window - 1
         max_steps = min(max_pages, ceil_div(span, page_size) + 1)
     return FlashDecodeSchedule(page_size=page_size, max_pages=max_pages,
                                q_len=q_len, window=window,
-                               max_steps=max_steps)
+                               max_steps=max_steps, q_chunk=q_chunk,
+                               num_q_blocks=num_q_blocks)
 
 
-def _page_bounds(ctx, *, q_len, page_size, window,
+def _page_bounds(ctx, i, *, q_len, q_chunk, page_size, window,
                  _min=jnp.minimum, _max=jnp.maximum):
-    """Inclusive [j_lo, j_hi] logical-page range for a context of ``ctx``
-    tokens (the current q rows occupy positions ctx-q_len .. ctx-1).
+    """Inclusive [j_lo, j_hi] logical-page range visible to q block ``i``
+    of a context of ``ctx`` tokens (the step's ``q_len`` rows occupy
+    positions ``ctx - q_len .. ctx - 1``; block ``i`` holds rows
+    ``i*q_chunk .. (i+1)*q_chunk - 1`` of those).
 
     Traced int32 in the index maps / kernel body; Python ints (with
     ``min``/``max`` passed in) in ``pages_touched``.
     """
-    j_hi = _max(ctx - 1, 0) // page_size
+    base = ctx - q_len
+    last = _min(base + (i + 1) * q_chunk - 1, ctx - 1)
+    j_hi = _max(last, 0) // page_size
     j_lo = 0
     if window is not None:
-        # first k visible to the oldest q row (pos ctx - q_len):
-        # k > pos - window  =>  k_min = max(ctx - q_len - window + 1, 0)
-        first_k = _max(ctx - q_len - window + 1, 0)
+        # first k visible to the block's oldest row (pos base + i*q_chunk):
+        # k > pos - window  =>  k_min = max(pos - window + 1, 0)
+        first_k = _max(base + i * q_chunk - window + 1, 0)
         j_lo = _min(first_k // page_size, j_hi)
     return j_lo, j_hi
 
 
 def pages_touched(lengths, sched: FlashDecodeSchedule) -> int:
-    """KV pages streamed for one decode step over a batch of context
-    lengths (post-write, i.e. including the step's new tokens) — the
-    analytic benchmark counter (cf. ``FlashSchedule.blocks_touched``)."""
+    """KV pages streamed for one step over a batch of context lengths
+    (post-write, i.e. including the step's new tokens) — the analytic
+    benchmark counter (cf. ``FlashSchedule.blocks_touched``).  Sums over
+    the q blocks: a chunked prefill streams early pages once per later
+    block, exactly as the launched walk does."""
     total = 0
     for ctx in lengths:
-        j_lo, j_hi = _page_bounds(int(ctx), q_len=sched.q_len,
-                                  page_size=sched.page_size,
-                                  window=sched.window, _min=min, _max=max)
-        total += j_hi - j_lo + 1
+        for i in range(sched.num_q_blocks):
+            j_lo, j_hi = _page_bounds(int(ctx), i, q_len=sched.q_len,
+                                      q_chunk=sched.q_chunk,
+                                      page_size=sched.page_size,
+                                      window=sched.window, _min=min,
+                                      _max=max)
+            total += j_hi - j_lo + 1
     return total
 
 
@@ -136,11 +168,13 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                    acc_ref, m_ref, l_ref, *, scale, window, softcap,
                    sched: FlashDecodeSchedule, kh, out_dtype):
     n = pl.program_id(0)
-    jj = pl.program_id(1)
+    i = pl.program_id(1)
+    jj = pl.program_id(2)
     b = n // kh
-    ps, qs = sched.page_size, sched.q_len
+    ps, qc = sched.page_size, sched.q_chunk
     ctx = len_ref[b]
-    j_lo, j_hi = _page_bounds(ctx, q_len=qs, page_size=ps, window=window)
+    j_lo, j_hi = _page_bounds(ctx, i, q_len=sched.q_len, q_chunk=qc,
+                              page_size=ps, window=window)
     j = jnp.minimum(j_lo + jj, j_hi)        # must match the KV index map
 
     @pl.when(jj == 0)
@@ -151,7 +185,8 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j_lo + jj <= j_hi)
     def _compute():
-        q = q_ref[0, 0]                     # (g·qs, D)
+        g = q_ref.shape[2]
+        q = q_ref[0, 0].reshape(g * qc, q_ref.shape[-1])    # (g·qc, D)
         k = k_ref[0, :, 0, :]               # (ps, D)
         v = v_ref[0, :, 0, :]               # (ps, D)
         s = jax.lax.dot_general(
@@ -160,10 +195,10 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
 
-        # rows are the query group laid out (g, qs) flattened: row r is
-        # query token r % qs at position ctx - qs + r % qs
+        # rows are the query group laid out (g, qc) flattened: row r is
+        # query token i*qc + r % qc at position ctx - q_len + i*qc + r % qc
         row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        q_pos = ctx - qs + row % qs
+        q_pos = ctx - sched.q_len + i * qc + row % qc
         k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         allowed = k_pos <= q_pos            # causal + page tail in one
         if window is not None:
@@ -185,10 +220,11 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
             preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
-    @pl.when(jj == pl.num_programs(1) - 1)
+    @pl.when(jj == pl.num_programs(2) - 1)
     def _epilogue():
-        o_ref[0, 0] = (acc_ref[...]
-                       / jnp.maximum(l_ref[...], 1e-37)).astype(out_dtype)
+        g = o_ref.shape[2]
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = o.reshape(g, qc, o_ref.shape[-1]).astype(out_dtype)
 
 
 def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
@@ -196,10 +232,12 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
                         lengths: jax.Array, *, scale: float,
                         window: int | None = None,
                         softcap: float | None = None,
+                        q_chunk: int | None = None,
                         out_dtype=None, interpret: bool = False):
-    """Paged flash decode.  Shapes:
+    """Paged flash attention over a page pool.  Shapes:
 
-      q          (B, H, q_len, D) — the step's new queries (q_len small),
+      q          (B, H, q_len, D) — the step's new queries (1 for plain
+                 decode, a whole prompt chunk for chunked prefill),
       k_pages    (P, page, KH, D) — one layer's KV page pool (v_pages alike),
       page_table (B, max_pages) int32 — physical page of logical page j,
       lengths    (B,) int32 — context length *including* the q_len new
@@ -207,8 +245,10 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
 
     Returns (B, H, q_len, D) in ``out_dtype`` (default q.dtype).  H must
     be a multiple of KH; each KV head's page stream is fetched once per
-    (b, kv-head) grid cell and consumed by its whole query group.  The
-    page table and lengths travel via scalar prefetch so the KV index map
+    (b, kv-head, q-block) grid cell and consumed by its whole query
+    group.  ``q_chunk`` bounds the rows resident per block (default: all
+    of q_len in one block — right for decode-sized steps); the page
+    table and lengths travel via scalar prefetch so the KV index map
     resolves physical pages before each DMA.
     """
     b, h, qs, d = q.shape
@@ -219,21 +259,22 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
     assert page_table.shape == (b, max_pages)
     g = h // kh
     out_dtype = out_dtype or q.dtype
-    sched = flash_decode_schedule(max_pages, ps, q_len=qs, window=window)
-    rows = g * qs
+    sched = flash_decode_schedule(max_pages, ps, q_len=qs, window=window,
+                                  q_chunk=q_chunk)
+    qc = sched.q_chunk
 
-    # (B, H, qs, D) → (B, KH, g·qs, D): group rows of one KV head together
-    qg = q.reshape(b, kh, rows, d)
+    # (B, H, qs, D) → (B, KH, g, qs, D): group rows of one KV head together
+    qg = q.reshape(b, kh, g, qs, d)
 
-    bounds = functools.partial(_page_bounds, q_len=qs, page_size=ps,
-                               window=window)
+    bounds = functools.partial(_page_bounds, q_len=qs, q_chunk=qc,
+                               page_size=ps, window=window)
 
-    def q_index(n, jj, pt_ref, len_ref):
-        return (n // kh, n % kh, 0, 0)
+    def q_index(n, i, jj, pt_ref, len_ref):
+        return (n // kh, n % kh, 0, i, 0)
 
-    def kv_index(n, jj, pt_ref, len_ref):
+    def kv_index(n, i, jj, pt_ref, len_ref):
         sb = n // kh
-        j_lo, j_hi = bounds(len_ref[sb])
+        j_lo, j_hi = bounds(len_ref[sb], i)
         # clamped sparse walk: trailing steps revisit j_hi (copy elided)
         return (pt_ref[sb, jnp.minimum(j_lo + jj, j_hi)], 0, n % kh, 0)
 
@@ -242,22 +283,22 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
         sched=sched, kh=kh, out_dtype=out_dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b * kh, sched.max_steps),
+        grid=(b * kh, sched.num_q_blocks, sched.max_steps),
         in_specs=[
-            pl.BlockSpec((1, 1, rows, d), q_index),
+            pl.BlockSpec((1, 1, g, qc, d), q_index),
             pl.BlockSpec((1, ps, 1, d), kv_index),
             pl.BlockSpec((1, ps, 1, d), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, rows, d), q_index),
+        out_specs=pl.BlockSpec((1, 1, g, qc, d), q_index),
         scratch_shapes=[
-            pltpu.VMEM((rows, d), jnp.float32),
-            pltpu.VMEM((rows, 1), jnp.float32),
-            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((g * qc, d), jnp.float32),
+            pltpu.VMEM((g * qc, 1), jnp.float32),
+            pltpu.VMEM((g * qc, 1), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kh, rows, d), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, qs, d), out_dtype),
         interpret=interpret,
     )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
       qg, k_pages, v_pages)

@@ -63,16 +63,19 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            scale: float | None = None,
                            window: int | None = None,
                            softcap: float | None = None,
+                           q_chunk: int | None = None,
                            mode: str | None = None) -> jax.Array:
-    """Decode-step attention over a paged KV cache (always causal).
+    """Attention over a paged KV cache (always causal).
 
     q (B, q_len, H, D) — the step's new queries (q_len = 1 for plain
-    decode); k_pages/v_pages (P, page, KH, D) one layer's page pool;
-    page_table (B, max_pages) int32; lengths (B,) int32 per-sequence
-    context *including* the new tokens (their K/V already committed).
-    Returns (B, q_len, H, D).
+    decode, a whole prompt chunk for chunked paged prefill);
+    k_pages/v_pages (P, page, KH, D) one layer's page pool; page_table
+    (B, max_pages) int32; lengths (B,) int32 per-sequence context
+    *including* the new tokens (their K/V already committed).  Returns
+    (B, q_len, H, D).  ``q_chunk`` bounds the q rows resident per kernel
+    block (multi-query-row steps; ignored by the dense oracle).
 
-    Lowers to the paged flash-decode kernel (``decode.py``) under
+    Lowers to the paged flash kernel (``decode.py``) under
     ``pallas``/``pallas_interpret`` — a length-aware page walk that
     streams each KV-head's occupied pages once per query group — and to
     the dense gather oracle ``ref.paged_attention_ref`` under ``ref``.
@@ -91,5 +94,6 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     else:
         o = paged_decode_kernel(qh, k_pages, v_pages, page_table, lengths,
                                 scale=scale, window=window, softcap=softcap,
+                                q_chunk=q_chunk,
                                 interpret=(mode == "pallas_interpret"))
     return o.transpose(0, 2, 1, 3)

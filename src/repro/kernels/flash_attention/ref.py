@@ -64,14 +64,17 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         lengths: jnp.ndarray, *, scale: float,
                         window: int | None = None,
                         softcap: float | None = None) -> jnp.ndarray:
-    """Dense decode oracle over a paged cache.
+    """Dense decode / chunked-prefill oracle over a paged cache.
 
     q (B, H, q_len, D); pools (P, page, KH, D); lengths (B,) int32 is the
     per-sequence context *including* the q_len new tokens → (B, H, q_len,
     D).  Row r of sequence b sits at position ``lengths[b] - q_len + r``;
     causality, the sliding window, and the uncommitted cache tail are all
     enforced against that position (f32 softmax, kernel-matching 0-output
-    normalization for fully-masked rows).
+    normalization for fully-masked rows).  q_len may be a whole prompt
+    chunk — this is the oracle for every q-block schedule the paged
+    kernel launches (``q_chunk`` only changes the kernel's blocking,
+    never the math).
     """
     b, h, qs, d = q.shape
     kh = k_pages.shape[2]

@@ -39,7 +39,10 @@ DEFAULT_LOGICAL_RULES: dict[str, tuple] = {
     "kv_seq": (("pod", "data", "model"), ("data", "model"), "model"),
     # paged KV pool (serving/cache.py layout="paged"): the page dim of
     # k_pages/v_pages takes the split-KV role of kv_seq — pages of one
-    # sequence may land on different chips; GSPMD gathers via the table
+    # sequence may land on different chips; GSPMD gathers via the table.
+    # The free-list allocator's control state (alloc_free/top/ref, cache
+    # alloc="dynamic") is deliberately ruleless → replicated: tiny int32
+    # arrays every chip must read whole before indexing the split pool.
     "kv_pages": (("pod", "data", "model"), ("data", "model"), "model"),
     "vocab": ("model",),
     "embed": (None,),

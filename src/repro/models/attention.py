@@ -25,12 +25,13 @@ from repro.models.layers import apply_norm, apply_rope, init_norm, softcap
 Params = dict
 NEG_INF = -2.3819763e38  # finite min-bf16-safe mask value
 
-# the paged flash-decode kernel is a single-q-block schedule (its whole
-# (g·q_len, D) q block + f32 accumulator live in VMEM): right for decode
-# steps of 1..few tokens, wrong for a cache-writing prefill over a long
-# prompt — those fall back to the dense-gather path (chunked paged
-# prefill is a recorded ROADMAP next step)
+# decode steps up to this many new tokens run the paged flash kernel as a
+# single q block (the whole (g·q_len, D) block + f32 accumulator in VMEM);
+# longer cache-writing steps (chunked paged prefill) keep the same kernel
+# but tile the rows into PAGED_PREFILL_CHUNK_Q-row q blocks, each walking
+# only the pages its own causal horizon exposes
 PAGED_FLASH_MAX_Q = 8
+PAGED_PREFILL_CHUNK_Q = 128
 
 
 def _flash_engine_live(cfg: ModelConfig) -> bool:
@@ -185,11 +186,13 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
 
     q (B,S,H,hd), k/v (B,S,K,hd) — already rope'd; cache (k_pages,
     v_pages) each (P, page, K, hd); cache_pos (B,) per-sequence lengths
-    before the write.  Decode-sized steps (S ≤ ``PAGED_FLASH_MAX_Q``)
-    route through the paged flash-decode schedule under ``attn_impl`` ∈
-    {auto (Pallas live), flash}; longer steps (cache-writing prefill) and
-    ``attn_impl="jnp"`` gather the pages into a dense cache and reuse the
-    jnp decode path.
+    before the write.  Under ``attn_impl`` ∈ {auto (Pallas live), flash}
+    every step routes through the paged flash kernel: decode-sized steps
+    (S ≤ ``PAGED_FLASH_MAX_Q``) as one q block, longer cache-writing
+    steps (chunked paged prefill) tiled into ``PAGED_PREFILL_CHUNK_Q``
+    rows per block — no length ever falls back to the dense gather.
+    ``attn_impl="jnp"`` (or no Pallas) gathers the pages into a dense
+    cache and reuses the jnp decode path (the parity oracle).
     """
     ck, cv = cache
     page = ck.shape[1]
@@ -199,13 +202,14 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
     cv = cv.at[pidx, tok_pos % page].set(v.astype(cv.dtype))
     lengths = cache_pos + s
 
-    if s <= PAGED_FLASH_MAX_Q and _flash_engine_live(cfg):
+    if _flash_engine_live(cfg):
         from repro.kernels.flash_attention.ops import paged_decode_attention
+        q_chunk = None if s <= PAGED_FLASH_MAX_Q else PAGED_PREFILL_CHUNK_Q
 
         def _pdec(window):
             return paged_decode_attention(
                 q, ck, cv, page_table, lengths, scale=scale, window=window,
-                softcap=cfg.attn_logit_softcap)
+                softcap=cfg.attn_logit_softcap, q_chunk=q_chunk)
 
         o = _run_windowed(_pdec, cfg, is_local)
     else:

@@ -189,10 +189,12 @@ def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
     (x, aux_sum), new_kvs = jax.lax.scan(body, (x, 0.0), xs)
     new_cache = None
     if paged:
-        # layer-independent page table rides along; seq_lens is stamped by
-        # apply_model (it knows how many tokens were committed)
-        new_cache = {"k_pages": new_kvs[0], "v_pages": new_kvs[1],
-                     "page_table": page_table}
+        # layer-independent state (page table, allocator arrays, …) rides
+        # along untouched; seq_lens is stamped by apply_model (it knows
+        # how many tokens were committed)
+        new_cache = {k: v for k, v in cache.items()
+                     if k not in ("k_pages", "v_pages")}
+        new_cache["k_pages"], new_cache["v_pages"] = new_kvs[0], new_kvs[1]
     elif decode:
         new_cache = {"k": new_kvs[0], "v": new_kvs[1]}
     return x, aux_sum, new_cache

@@ -1,0 +1,258 @@
+"""Dynamic page allocator + prefix-sharing tables for the paged KV cache.
+
+PR 4's paged layout made the page table the *only* way the kernel
+addresses KV — physical placement is opaque (``docs/DESIGN.md`` §2
+invariant 3).  This module exploits exactly that opacity: instead of
+``default_page_table``'s build-time striping (every sequence owns a
+static rectangle of pages forever), a **free-list allocator** hands pages
+out at admission time and recycles them at retirement, so a pool can
+serve an unbounded request stream (``serving/scheduler.py``) and two
+sequences with a common prompt prefix can *share* the prefix's pages.
+
+All state is arrays and the core operations (``alloc_pages`` /
+``free_pages`` / ``share_pages``) are pure masked-scatter functions of
+it, so they compose with jit and the state rides inside the cache pytree
+(donated into the serving loop like everything else).  The cache-level
+helpers (``admit_sequence`` / ``free_sequence`` / ``fork_sequence``) are
+the scheduler's host-side admission path — they branch on the returned
+``ok`` eagerly:
+
+  free stack   (P,) int32   ``free[:top]`` are the ids of free pages
+  top          ()   int32   number of free pages (stack pointer)
+  refcounts    (P,) int32   live references per page (0 = free)
+
+Embedded in a ``layout="paged"`` cache (``init_cache(...,
+alloc="dynamic")``) the arrays appear as ``alloc_free`` / ``alloc_top``
+/ ``alloc_ref`` plus ``alloc_held`` (B,) int32 — how many leading
+``page_table`` entries each row actually references (owned or shared).
+
+**Reserved scratch page** — page id 0 is never allocated (its refcount
+is pinned at init).  Idle batch slots and the unallocated tail of every
+table row point at it, so their masked writes land somewhere harmless
+without violating validity (invariant 1): the scratch page is never
+named by a live sequence's walked range.
+
+**Prefix sharing (refcount + boundary CoW)** — ``fork_sequence`` builds
+a child row whose first ``prefix_len // page_size`` entries alias the
+parent's pages (refcount++, read-only from then on), while the partially
+filled *boundary* page is **copied eagerly** into a private child page:
+the child will write positions ``>= prefix_len`` and the first of those
+lands mid-page, so the copy-on-write happens at fork time, before any
+write can alias.  Writes therefore only ever target pages with
+refcount 1 — the *disjoint writable sets* invariant (``docs/DESIGN.md``
+§2, which this module relaxes from full disjointness).
+
+``free_sequence`` decrements refcounts along the row and pushes only the
+pages that drop to zero back on the stack, so shared prefixes survive
+until their last referencing sequence retires.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.tiling import ceil_div
+
+__all__ = ["ALLOC_KEYS", "init_allocator", "can_admit", "alloc_pages",
+           "free_pages", "share_pages", "attach_allocator",
+           "allocator_state", "store_allocator", "admit_sequence",
+           "free_sequence", "fork_sequence", "pool_occupancy",
+           "SCRATCH_PAGE"]
+
+SCRATCH_PAGE = 0          # reserved sink page, never allocated
+_RESERVED = 1             # pages [0, _RESERVED) are pinned at init
+
+ALLOC_KEYS = ("alloc_free", "alloc_top", "alloc_ref", "alloc_held")
+
+
+# ---------------------------------------------------------------------------
+# Core free-list operations (pure array-state functions, jit-compatible)
+# ---------------------------------------------------------------------------
+def init_allocator(n_pages: int) -> dict:
+    """Fresh allocator over a pool of ``n_pages`` physical pages.
+
+    Pages ``[_RESERVED, n_pages)`` start on the free stack (top of stack
+    = highest id, so early allocations land at the pool's far end —
+    deliberately nothing like the contiguous layout, keeping the
+    indirection honest); page 0 is the pinned scratch page.
+    """
+    assert n_pages > _RESERVED, f"pool of {n_pages} pages is all-reserved"
+    ids = jnp.arange(n_pages, dtype=jnp.int32)
+    return {
+        "free": jnp.where(ids < n_pages - _RESERVED, ids + _RESERVED, 0),
+        "top": jnp.asarray(n_pages - _RESERVED, jnp.int32),
+        "ref": jnp.where(ids < _RESERVED, 1, 0).astype(jnp.int32),
+    }
+
+
+def can_admit(state: dict, n) -> jnp.ndarray:
+    """bool scalar — are ``n`` free pages available right now?"""
+    return jnp.asarray(n, jnp.int32) <= state["top"]
+
+
+def alloc_pages(state: dict, n, width: int):
+    """Pop ``n`` pages into a ``(width,)`` table row (entries past ``n``
+    are scratch).  Returns ``(state, row, ok)``; when ``ok`` is False
+    (fewer than ``n`` pages free) the state is unchanged and the row is
+    all-scratch — admission control is the caller branching on ``ok``.
+    """
+    n = jnp.asarray(n, jnp.int32)
+    n_pool = state["free"].shape[0]
+    ok = can_admit(state, n)
+    j = jnp.arange(width, dtype=jnp.int32)
+    take = (j < n) & ok
+    idx = jnp.clip(state["top"] - 1 - j, 0, n_pool - 1)
+    row = jnp.where(take, state["free"][idx], SCRATCH_PAGE)
+    # scatter-add with dropped out-of-range targets guards the no-op case
+    ref = state["ref"].at[jnp.where(take, row, n_pool)].add(1, mode="drop")
+    top = jnp.where(ok, state["top"] - n, state["top"])
+    return {"free": state["free"], "top": top, "ref": ref}, row, ok
+
+
+def free_pages(state: dict, row: jnp.ndarray, count) -> dict:
+    """Drop one reference from the first ``count`` entries of ``row``;
+    pages whose refcount reaches zero go back on the free stack."""
+    count = jnp.asarray(count, jnp.int32)
+    n_pool = state["free"].shape[0]
+    width = row.shape[0]
+    held = jnp.arange(width, dtype=jnp.int32) < count
+    ref = state["ref"].at[jnp.where(held, row, n_pool)].add(-1, mode="drop")
+    released = held & (ref[row] == 0)
+    # pack released ids onto the stack: k-th released page → free[top + k]
+    pos = state["top"] + jnp.cumsum(released.astype(jnp.int32)) - 1
+    free = state["free"].at[jnp.where(released, pos, n_pool)].set(
+        row, mode="drop")
+    top = state["top"] + jnp.sum(released.astype(jnp.int32))
+    return {"free": free, "top": top, "ref": ref}
+
+
+def share_pages(state: dict, row: jnp.ndarray, count) -> dict:
+    """Add a reference to the first ``count`` entries of ``row`` (a new
+    sequence aliasing an existing prefix, read-only from now on)."""
+    count = jnp.asarray(count, jnp.int32)
+    n_pool = state["free"].shape[0]
+    held = jnp.arange(row.shape[0], dtype=jnp.int32) < count
+    ref = state["ref"].at[jnp.where(held, row, n_pool)].add(1, mode="drop")
+    return {"free": state["free"], "top": state["top"], "ref": ref}
+
+
+# ---------------------------------------------------------------------------
+# Cache-level glue: the allocator owns page_table / seq_lens
+# ---------------------------------------------------------------------------
+def attach_allocator(cache: dict, n_pages: int) -> dict:
+    """Embed fresh allocator state into a paged cache dict (one donatable
+    pytree; called by ``init_cache(..., alloc="dynamic")``)."""
+    state = init_allocator(n_pages)
+    batch = cache["page_table"].shape[0]
+    cache["alloc_free"] = state["free"]
+    cache["alloc_top"] = state["top"]
+    cache["alloc_ref"] = state["ref"]
+    cache["alloc_held"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def allocator_state(cache: dict) -> dict:
+    return {"free": cache["alloc_free"], "top": cache["alloc_top"],
+            "ref": cache["alloc_ref"]}
+
+
+def store_allocator(cache: dict, state: dict) -> dict:
+    cache = dict(cache)
+    cache["alloc_free"], cache["alloc_top"], cache["alloc_ref"] = \
+        state["free"], state["top"], state["ref"]
+    return cache
+
+
+def _page_size(cache: dict) -> int:
+    return cache["k_pages"].shape[2]
+
+
+def pool_occupancy(cache: dict) -> tuple[int, int]:
+    """(pages in use, pool size) — reserved scratch pages count as used."""
+    n = int(cache["alloc_free"].shape[0])
+    return n - int(cache["alloc_top"]), n
+
+
+def admit_sequence(cache: dict, slot: int, n_tokens: int):
+    """Allocate pages for a sequence of up to ``n_tokens`` tokens into
+    batch row ``slot``.  Returns ``(cache, ok)``; on success the row's
+    table entries are the fresh pages (tail = scratch), ``seq_lens`` is
+    reset to 0 and ``alloc_held`` records the page count for the
+    eventual ``free_sequence``.  On failure the cache is unchanged.
+    """
+    width = cache["page_table"].shape[1]
+    need = ceil_div(int(n_tokens), _page_size(cache))
+    assert need <= width, (n_tokens, width)
+    state, row, ok = alloc_pages(allocator_state(cache), need, width)
+    cache = store_allocator(cache, state)
+    cache["page_table"] = cache["page_table"].at[slot].set(
+        jnp.where(ok, row, cache["page_table"][slot]))
+    cache["seq_lens"] = cache["seq_lens"].at[slot].set(
+        jnp.where(ok, 0, cache["seq_lens"][slot]))
+    cache["alloc_held"] = cache["alloc_held"].at[slot].set(
+        jnp.where(ok, need, cache["alloc_held"][slot]))
+    return cache, ok
+
+
+def free_sequence(cache: dict, slot: int) -> dict:
+    """Retire row ``slot``: release its page references (recycling those
+    that drop to zero), point the row at scratch, zero its length."""
+    row = cache["page_table"][slot]
+    state = free_pages(allocator_state(cache), row, cache["alloc_held"][slot])
+    cache = store_allocator(cache, state)
+    width = cache["page_table"].shape[1]
+    cache["page_table"] = cache["page_table"].at[slot].set(
+        jnp.full((width,), SCRATCH_PAGE, jnp.int32))
+    cache["seq_lens"] = cache["seq_lens"].at[slot].set(0)
+    cache["alloc_held"] = cache["alloc_held"].at[slot].set(0)
+    return cache
+
+
+def fork_sequence(cache: dict, parent: int, child: int, prefix_len: int,
+                  n_tokens: int, *, copy: bool = False):
+    """Admit row ``child`` sharing the first ``prefix_len`` committed
+    tokens of row ``parent`` (capacity ``n_tokens`` total).
+
+    The ``prefix_len // page_size`` *full* prefix pages are aliased into
+    the child's table (refcount++, read-only); a partially filled
+    boundary page is **copied** into a private child page (eager CoW —
+    the child's first write lands mid-page), and the remaining capacity
+    gets fresh private pages.  ``copy=True`` copies the full pages too
+    (no aliasing) — the disjoint twin the sharing tests compare against.
+
+    The child wakes with ``seq_lens = prefix_len``: the prefix is already
+    committed, so prefill only runs the suffix.  Returns ``(cache, ok)``.
+    """
+    page = _page_size(cache)
+    width = cache["page_table"].shape[1]
+    prefix_len = int(prefix_len)
+    full = prefix_len // page if not copy else 0
+    copied_pages = ceil_div(prefix_len, page) - full  # boundary (or all) pages
+    total = ceil_div(int(n_tokens), page)
+    assert prefix_len <= n_tokens and total <= width, (prefix_len, n_tokens)
+    private = total - full
+
+    state, prow, ok = alloc_pages(allocator_state(cache), private, width)
+    if not bool(ok):
+        return store_allocator(cache, state), ok
+    state = share_pages(state, cache["page_table"][parent], full)
+    cache = store_allocator(cache, state)
+
+    j = jnp.arange(width, dtype=jnp.int32)
+    row = jnp.where(j < full, cache["page_table"][parent],
+                    jnp.where(j < total,
+                              prow[jnp.clip(j - full, 0, width - 1)],
+                              SCRATCH_PAGE))
+    # eager CoW: copy the parent's partially-committed pages (just the
+    # boundary page, or every prefix page under copy=True) into the
+    # child's private ids before any child write can land there
+    for c in range(copied_pages):
+        src = cache["page_table"][parent, full + c]
+        dst = row[full + c]
+        cache["k_pages"] = cache["k_pages"].at[:, dst].set(
+            cache["k_pages"][:, src])
+        cache["v_pages"] = cache["v_pages"].at[:, dst].set(
+            cache["v_pages"][:, src])
+    cache["page_table"] = cache["page_table"].at[child].set(row)
+    cache["seq_lens"] = cache["seq_lens"].at[child].set(prefix_len)
+    cache["alloc_held"] = cache["alloc_held"].at[child].set(total)
+    return cache, ok

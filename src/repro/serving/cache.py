@@ -14,15 +14,19 @@ Two attention-cache layouts behind one ``init_cache`` API (see
 tables (attention families only; the SSM state is already O(1)):
   k_pages/v_pages  (L, n_pages, page_size, KVH, hd)
   page_table       (B, max_pages) int32 — physical page id of logical page
-                   j of sequence b; rows own disjoint page sets
+                   j of sequence b; rows' *writable* page sets are disjoint
   seq_lens         (B,) int32 — tokens currently committed per sequence
+  alloc_*          (``alloc="dynamic"`` only) free-list allocator state —
+                   see ``serving/allocator.py``
 
 Page-table invariants (``docs/DESIGN.md`` §2): entries are valid pool
-indices; distinct sequences never share a physical page; token position
-``p`` of sequence ``b`` lives at ``(page_table[b, p // page_size],
-p % page_size)``; only the first ``seq_lens[b]`` positions hold committed
-data (later slots may hold prefill-padding garbage that decode masks until
-it overwrites them).
+indices; distinct sequences never *write* the same physical page (a
+read-only shared prefix page may appear in several rows while its
+refcount is tracked by the allocator); token position ``p`` of sequence
+``b`` lives at ``(page_table[b, p // page_size], p % page_size)``; only
+the first ``seq_lens[b]`` positions hold committed data (later slots may
+hold prefill-padding garbage that decode masks until it overwrites
+them).
 
 Sharding policy (``docs/DESIGN.md`` §3): batch over the DP axes; KV heads
 over ``model`` when divisible, otherwise the **sequence** dim of the dense
@@ -59,6 +63,10 @@ def default_page_table(batch: int, max_pages: int,
       * ``"striped"`` — logical page ``j`` of sequence ``b`` is physical
         page ``j * batch + b``: consecutive logical pages of one sequence
         are scattered across the pool, exercising true indirection.
+
+    The dynamic third option lives in ``serving/allocator.py``
+    (``init_cache(..., alloc="dynamic")``): rows start unallocated and a
+    free-list allocator assigns/recycles pages at admission/retirement.
     """
     b = jnp.arange(batch, dtype=jnp.int32)[:, None]
     j = jnp.arange(max_pages, dtype=jnp.int32)[None, :]
@@ -72,7 +80,8 @@ def default_page_table(batch: int, max_pages: int,
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, layout: str = "dense",
                page_size: int = DEFAULT_PAGE_SIZE,
-               alloc: str = "contiguous") -> dict:
+               alloc: str = "contiguous",
+               pool_pages: int | None = None) -> dict:
     """Zero-initialised decode cache for ``batch`` sequences of up to
     ``max_len`` tokens.
 
@@ -85,11 +94,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         (fixed-size KV pages + per-sequence page tables; attention
         families only).
       page_size: tokens per KV page (paged layout only).
-      alloc: initial physical page placement, see ``default_page_table``.
+      alloc: initial physical page placement — ``"contiguous"`` /
+        ``"striped"`` build-time static tables (``default_page_table``),
+        or ``"dynamic"``: rows start unallocated (all-scratch tables,
+        ``seq_lens = 0``) and the embedded free-list allocator
+        (``serving/allocator.py``, state keys ``alloc_*``) assigns pages
+        at admission and recycles them at retirement.
+      pool_pages: physical pool size (paged only; default
+        ``batch * ceil(max_len / page_size)``).  With ``alloc="dynamic"``
+        the pool may be smaller than the worst-case rectangle — prefix
+        sharing and admission control are what make that safe.
 
     Returns a dict of arrays (shapes in the module docstring).  The paged
     dict additionally carries ``page_table`` (B, max_pages) int32 and
-    ``seq_lens`` (B,) int32 so the whole decode state is one donatable
+    ``seq_lens`` (B,) int32 — plus the ``alloc_*`` allocator arrays under
+    ``alloc="dynamic"`` — so the whole decode state is one donatable
     pytree.
     """
     if layout not in ("dense", "paged"):
@@ -114,13 +133,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
             cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
     elif layout == "paged":
         max_pages = ceil_div(max_len, page_size)
-        n_pages = batch * max_pages
+        n_pages = pool_pages if pool_pages is not None else batch * max_pages
         cache["k_pages"] = jnp.zeros(
             (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
             dtype)
         cache["v_pages"] = jnp.zeros_like(cache["k_pages"])
-        cache["page_table"] = default_page_table(batch, max_pages, alloc)
-        cache["seq_lens"] = jnp.zeros((batch,), jnp.int32)
+        if alloc == "dynamic":
+            from repro.serving.allocator import SCRATCH_PAGE, attach_allocator
+            cache["page_table"] = jnp.full((batch, max_pages), SCRATCH_PAGE,
+                                           jnp.int32)
+            cache["seq_lens"] = jnp.zeros((batch,), jnp.int32)
+            cache = attach_allocator(cache, n_pages)
+        else:
+            if n_pages < batch * max_pages:
+                raise ValueError(
+                    f"static page tables need batch*max_pages = "
+                    f"{batch * max_pages} pages; pool has {n_pages} "
+                    f"(use alloc='dynamic' to oversubscribe)")
+            cache["page_table"] = default_page_table(batch, max_pages, alloc)
+            cache["seq_lens"] = jnp.zeros((batch,), jnp.int32)
     else:
         cache["k"] = jnp.zeros(
             (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
@@ -130,11 +161,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
-                       layout: str = "dense") -> dict:
+                       layout: str = "dense", dynamic: bool = False) -> dict:
     """Logical axes per cache array (``docs/DESIGN.md`` §3).
 
     ``kv_shard``: ``auto | heads | seq`` — ``seq`` means the dense cache's
     sequence dim, or the paged pool's page dim, goes to ``model``.
+    ``dynamic`` adds the ``alloc_*`` allocator arrays (replicated: the
+    free list / refcounts are tiny int32 control state that every chip
+    needs whole — only ``alloc_held`` is per-sequence and follows batch).
     """
     axes: dict = {}
     if cfg.family in ("ssm", "hybrid"):
@@ -156,6 +190,11 @@ def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
         axes["v_pages"] = paged
         axes["page_table"] = ("batch", None)
         axes["seq_lens"] = ("batch",)
+        if dynamic:
+            axes["alloc_free"] = (None,)
+            axes["alloc_top"] = ()
+            axes["alloc_ref"] = (None,)
+            axes["alloc_held"] = ("batch",)
     else:
         kv = _kv_axes(cfg, kv_shard)
         axes["k"] = kv

@@ -3,9 +3,13 @@
 The serving architecture is documented in ``docs/DESIGN.md``; in short:
 
   * ``prefill`` runs the whole (right-padded) prompt batch through the
-    cache-writing path once, committing prompt KV into the cache (dense
-    rows or paged pools) and returning each sequence's next-token logits
-    at its *own* last prompt position — a batch may mix prompt lengths.
+    cache-writing path — one pass, or fixed-size q-chunks (``chunk=``)
+    that lower through the multi-query-row paged flash kernel for long
+    prompts — committing prompt KV into the cache (dense rows or paged
+    pools) and returning each sequence's next-token logits at its *own*
+    last prompt position; a batch may mix prompt lengths, and
+    ``start_pos`` starts past an already-committed (e.g. prefix-shared)
+    context.
   * ``serve_step`` is one decode step: B new tokens against per-sequence
     contexts.  It is what the decode_32k / long_500k dry-run cells lower.
   * ``greedy_decode`` is the batched serving loop: a single jitted
@@ -44,50 +48,91 @@ def prefill_step(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     return logits, aux
 
 
+def cache_capacity(cache: dict) -> int | None:
+    """Token capacity of a decode cache, or None for pure-SSM state
+    (O(1) in context length — no positional capacity to exceed)."""
+    if "k_pages" in cache:
+        return cache["page_table"].shape[1] * cache["k_pages"].shape[2]
+    if "k" in cache:
+        return cache["k"].shape[2]
+    if "shared_k" in cache:
+        # hybrid (zamba2): the shared-attention sites carry the only
+        # positional buffers — their S_max bounds the context
+        return cache["shared_k"].shape[2]
+    return None
+
+
 def prefill(params: Params, cache: dict, prompts: jax.Array,
             prompt_lens: jax.Array, cfg: ModelConfig, *,
-            memory: jax.Array | None = None):
+            memory: jax.Array | None = None,
+            chunk: int | None = None, start_pos: int = 0):
     """Prefill → decode handoff: commit prompt KV, return first logits.
 
     prompts (B, S_pad) int32, right-padded to the longest prompt;
     prompt_lens (B,) int32 true lengths (may differ per sequence).  The
     whole padded batch runs through the cache-writing path at positions
-    0..S_pad-1, so every layer's K/V lands in the cache (pages for the
-    paged layout).  Slots past ``prompt_lens[b]`` hold padding garbage
-    that decode masks per sequence until it overwrites them.
+    ``start_pos..start_pos+S_pad-1``, so every layer's K/V lands in the
+    cache (pages for the paged layout).  Slots past ``prompt_lens[b]``
+    hold padding garbage that decode masks per sequence until it
+    overwrites them.
+
+    ``chunk`` commits long prompts in fixed-size q-chunks instead of one
+    pass: each chunk is a cache-writing step over positions already
+    committed, which on a paged cache lowers through the multi-query-row
+    paged flash kernel (``kernels/flash_attention/decode.py``) — a
+    32k-class prompt streams pages chunk by chunk and never materializes
+    a dense (S, T) attention problem.  One pass (``chunk=None``) remains
+    the right call for serving-batch prompt sizes.
+
+    ``start_pos > 0`` prefills a *suffix*: the first ``start_pos``
+    positions are already committed (e.g. a prefix-shared admission,
+    ``serving/allocator.fork_sequence``) and ``prompts`` holds the
+    tokens from there on.  ``prompt_lens`` stays absolute (prefix +
+    suffix).
 
     Returns (next_logits (B, V) — logits at each sequence's last real
     prompt token — and the updated cache with ``seq_lens = prompt_lens``
     for the paged layout).
-
-    Scaling note: this one-pass handoff attends *densely* over the cache
-    (paged steps past ``attention.PAGED_FLASH_MAX_Q`` take the gather
-    fallback) — right for serving-batch prompt sizes; 32k-class prompts
-    need the chunked prefill recorded as a ROADMAP next step, or the
-    cache-less ``prefill_step`` when KV need not be committed.
     """
     b, s_pad = prompts.shape
-    if "k_pages" in cache:
-        capacity = cache["page_table"].shape[1] * cache["k_pages"].shape[2]
-    else:
-        capacity = cache["k"].shape[2] if "k" in cache else s_pad
-    if s_pad > capacity:
+    capacity = cache_capacity(cache)
+    if capacity is not None and start_pos + s_pad > capacity:
         # past capacity the paged scatter would clamp to the last page and
         # silently corrupt it — fail loudly while shapes are still static
-        raise ValueError(f"prompt width {s_pad} exceeds cache capacity "
-                         f"{capacity} tokens")
-    pos0 = jnp.zeros((b,), jnp.int32)
-    logits, cache, _ = apply_model(params, prompts, cfg, cache=cache,
-                                   cache_pos=pos0, memory=memory)
+        raise ValueError(f"prompt width {start_pos + s_pad} exceeds cache "
+                         f"capacity {capacity} tokens")
+    prompt_lens = jnp.asarray(prompt_lens, jnp.int32)
+    if chunk is None or s_pad <= chunk:
+        pos0 = jnp.full((b,), start_pos, jnp.int32)
+        logits, cache, _ = apply_model(params, prompts, cfg, cache=cache,
+                                       cache_pos=pos0, memory=memory)
+        next_logits = jnp.take_along_axis(
+            logits, (prompt_lens - 1 - start_pos)[:, None, None],
+            axis=1)[:, 0]
+    else:
+        next_logits = None
+        for c0 in range(0, s_pad, chunk):
+            cs = min(chunk, s_pad - c0)
+            pos0 = jnp.full((b,), start_pos + c0, jnp.int32)
+            logits, cache, _ = apply_model(
+                params, prompts[:, c0:c0 + cs], cfg, cache=cache,
+                cache_pos=pos0, memory=memory)
+            if next_logits is None:
+                next_logits = jnp.zeros((b, logits.shape[-1]), logits.dtype)
+            # each sequence's last real prompt token lives in exactly one
+            # chunk: harvest its logits as that chunk goes by
+            rel = prompt_lens - 1 - (start_pos + c0)
+            inside = (rel >= 0) & (rel < cs)
+            got = jnp.take_along_axis(
+                logits, jnp.clip(rel, 0, cs - 1)[:, None, None],
+                axis=1)[:, 0]
+            next_logits = jnp.where(inside[:, None], got, next_logits)
     if "seq_lens" in cache:
         # padded tails were written but are NOT committed: visibility is
         # governed by seq_lens, and decode overwrites them slot by slot.
         # (copy, not alias: the cache is routinely donated downstream and
         # must not share a buffer with the caller's prompt_lens)
         cache["seq_lens"] = jnp.array(prompt_lens, jnp.int32, copy=True)
-    next_logits = jnp.take_along_axis(
-        logits, (jnp.asarray(prompt_lens, jnp.int32) - 1)[:, None, None],
-        axis=1)[:, 0]
     return next_logits, cache
 
 

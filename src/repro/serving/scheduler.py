@@ -1,0 +1,275 @@
+"""Continuous-batching scheduler: admit → step → retire over a page pool.
+
+The static serving loop (``engine.prefill`` → ``engine.greedy_decode``)
+processes one batch to completion: every sequence holds its pages until
+the *slowest* one finishes.  Serving-class traffic (requests arriving
+continuously, wildly mixed prompt/output lengths) wants the vLLM-style
+loop instead — and the paged cache + free-list allocator make it a thin
+layer:
+
+  * **admit** — while a batch slot is free and the allocator can cover
+    ``ceil((prompt + budget) / page)`` pages, pop the next queued
+    request, allocate its pages (``allocator.admit_sequence``), and
+    prefill its prompt into them.  If a live sequence shares a prompt
+    prefix, the prefix's full pages are *aliased* instead of recomputed
+    (``allocator.fork_sequence``: refcounted read-only sharing, eager
+    CoW on the boundary page) and only the suffix is prefilled.  When
+    the pool can't cover the head-of-queue request, admission waits —
+    that is the admission control that keeps a decode step from ever
+    running out of pages mid-flight.
+  * **step** — one decode step for the whole live batch through the
+    *same* jitted scan body ``greedy_decode`` uses
+    (``engine._greedy_run`` with ``n_steps=1``, cache donated): the
+    static-batch loop is literally the special case of this loop where
+    every slot is admitted at tick 0 and nothing arrives later.  Idle
+    slots ride along masked (their table rows point at the reserved
+    scratch page; their lengths are re-zeroed after the step).
+  * **retire** — finished sequences (budget exhausted or EOS) release
+    their page references; pages whose refcount drops to zero return to
+    the free list and the next queued request takes them.
+
+Prompts are right-padded to a bucket multiple before prefill so the
+number of distinct prefill shapes — and with it the trace count — stays
+O(max_len / bucket) instead of O(#distinct prompt lengths).
+
+``benchmarks/serving.py`` drives a mixed-arrival trace through this
+loop against the static-batch baseline; ``examples/serve_quantized.py``
+shows it end to end with int8 projections.  Architecture notes:
+``docs/DESIGN.md`` §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.serving import allocator as alloc
+from repro.serving.cache import init_cache
+from repro.serving.engine import _greedy_run, prefill
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: ``prompt`` (token ids) and a generation
+    budget.  ``max_new_tokens`` bounds the page reservation at admission;
+    generation may stop earlier on ``eos_id``."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one live batch row."""
+
+    req: Request
+    generated: list
+    last_token: int
+
+
+class Scheduler:
+    """Continuous-batching serving loop over a dynamically-allocated
+    paged cache.
+
+    Args:
+      params / cfg: the model (any attention-family config).
+      slots: batch width B of the decode step (live-sequence capacity).
+      max_len: per-sequence context bound (page-table width).
+      page_size / pool_pages: pool geometry (``pool_pages`` may be far
+        below ``slots * ceil(max_len/page_size)`` — admission control
+        and prefix sharing are what make oversubscription safe).
+      prefill_chunk: commit prompts in fixed-size chunks through the
+        paged flash path (None = one pass; right below ~1k prompts).
+      share_prefix: alias common prompt-prefix pages between live
+        sequences instead of recomputing them.
+      bucket: prompts are right-padded to a multiple of this before
+        prefill (bounds the number of traced prefill shapes).
+      eos_id: optional early-stop token id.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 max_len: int = 256, page_size: int = 16,
+                 pool_pages: int | None = None,
+                 prefill_chunk: int | None = None,
+                 share_prefix: bool = True, bucket: int = 16,
+                 eos_id: int | None = None, dtype=jnp.float32):
+        self.params, self.cfg = params, cfg
+        self.page_size, self.bucket = page_size, bucket
+        self.prefill_chunk, self.share_prefix = prefill_chunk, share_prefix
+        self.eos_id = eos_id
+        self.cache = init_cache(cfg, slots, max_len, dtype=dtype,
+                                layout="paged", page_size=page_size,
+                                alloc="dynamic", pool_pages=pool_pages)
+        self.slots: list[_Slot | None] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.finished: dict[int, np.ndarray] = {}
+        self.occupancy_log: list[int] = []
+        self._next_rid = 0
+        self._ticks = 0
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, rid: int | None = None):
+        """Queue a request; returns its id.  May be called between any
+        two ``step``s — that is the point.  Rejects (loudly, here — not
+        mid-tick) requests whose page reservation could never fit the
+        per-sequence table, which would otherwise wedge the queue head."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size >= 1 and max_new_tokens >= 1
+        width = self.cache["page_table"].shape[1]
+        need = -(-(prompt.size + max_new_tokens) // self.page_size)
+        if need > width:
+            raise ValueError(
+                f"request needs {need} pages (prompt {prompt.size} + budget "
+                f"{max_new_tokens} tokens) but the table holds {width} "
+                f"(max_len {width * self.page_size})")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid + 1)
+        self.queue.append(Request(rid, prompt, max_new_tokens))
+        return rid
+
+    # -- introspection -----------------------------------------------------
+    def pool_occupancy(self) -> tuple[int, int]:
+        """(pages in use, pool size) right now."""
+        return alloc.pool_occupancy(self.cache)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -- the loop ----------------------------------------------------------
+    def step(self) -> list[int]:
+        """One scheduler tick: admit from the queue, run one decode step
+        for the live batch, retire rows that just finished (their pages
+        return to the pool before the next tick's admissions).  Returns
+        the ids of requests that finished this tick."""
+        self._admit()
+        self._decode()
+        done = self._retire()
+        self._ticks += 1
+        self.occupancy_log.append(self.pool_occupancy()[0])
+        return done
+
+    def run(self, max_ticks: int | None = None) -> dict[int, np.ndarray]:
+        """Drive ``step`` until queue and batch drain; returns
+        ``{rid: generated tokens}`` (first token from the prefill logits,
+        the rest from decode steps).  ``max_ticks`` bounds the ticks of
+        *this* call (the scheduler may have stepped before)."""
+        start = self._ticks
+        while self.queue or self.n_active:
+            self.step()
+            if max_ticks is not None and self._ticks - start > max_ticks:
+                raise RuntimeError(f"scheduler did not drain in "
+                                   f"{max_ticks} ticks")
+        return self.finished
+
+    # -- internals ---------------------------------------------------------
+    def _finished(self, slot: _Slot) -> bool:
+        if len(slot.generated) >= slot.req.max_new_tokens:
+            return True
+        return self.eos_id is not None and slot.last_token == self.eos_id
+
+    def _retire(self) -> list[int]:
+        done = []
+        for b, slot in enumerate(self.slots):
+            if slot is not None and self._finished(slot):
+                self.cache = alloc.free_sequence(self.cache, b)
+                self.finished[slot.req.rid] = np.asarray(slot.generated,
+                                                         np.int32)
+                done.append(slot.req.rid)
+                self.slots[b] = None
+        return done
+
+    def _prefix_match(self, prompt: np.ndarray):
+        """Longest shareable prefix with a live sequence: (slot, length).
+        Capped at ``len(prompt) - 1`` — the last prompt token must be
+        prefilled so its logits exist to seed generation.  Matches
+        shorter than one page are reported as no match: they would alias
+        zero full pages and pay a boundary-page copy for nothing (think
+        a shared BOS token)."""
+        best_b, best_len = -1, 0
+        for b, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            other = slot.req.prompt
+            n = min(prompt.size - 1, other.size)
+            eq = np.equal(prompt[:n], other[:n])
+            common = n if eq.all() else int(eq.argmin())
+            if common > best_len:
+                best_b, best_len = b, common
+        if best_len < self.page_size:
+            return -1, 0
+        return best_b, best_len
+
+    def _admit(self):
+        while self.queue:
+            try:
+                b = self.slots.index(None)
+            except ValueError:
+                return                       # batch full
+            req = self.queue[0]
+            budget = int(req.prompt.size) + req.max_new_tokens
+            parent, shared = (-1, 0)
+            if self.share_prefix:
+                parent, shared = self._prefix_match(req.prompt)
+            if shared > 0:
+                self.cache, ok = alloc.fork_sequence(
+                    self.cache, parent, b, shared, budget)
+            else:
+                self.cache, ok = alloc.admit_sequence(self.cache, b, budget)
+            if not bool(ok):
+                if self.n_active == 0:
+                    raise RuntimeError(
+                        f"request {req.rid} needs more pages than an empty "
+                        f"pool of {self.pool_occupancy()[1]} offers")
+                return                       # pool full: wait for retires
+            self.queue.popleft()
+            first = self._prefill_slot(b, req.prompt, start=shared)
+            self.slots[b] = _Slot(req, [first], first)
+
+    def _prefill_slot(self, b: int, prompt: np.ndarray, start: int) -> int:
+        """Commit ``prompt[start:]`` into row ``b``'s pages (positions
+        ``start..``) and return the first greedy token."""
+        suffix = prompt[start:]
+        pad = -suffix.size % self.bucket
+        padded = np.pad(suffix, (0, pad))
+        view = dict(self.cache)
+        view["page_table"] = self.cache["page_table"][b:b + 1]
+        view["seq_lens"] = self.cache["seq_lens"][b:b + 1]
+        nl, view = prefill(
+            self.params, view, jnp.asarray(padded[None]),
+            jnp.asarray([prompt.size], jnp.int32), self.cfg,
+            chunk=self.prefill_chunk, start_pos=start)
+        self.cache["k_pages"] = view["k_pages"]
+        self.cache["v_pages"] = view["v_pages"]
+        self.cache["seq_lens"] = self.cache["seq_lens"].at[b].set(
+            view["seq_lens"][0])
+        return int(jnp.argmax(nl[0]))
+
+    def _decode(self):
+        if not self.n_active:
+            return
+        from repro.kernels.tiled_matmul.ops import kernel_mode
+        active = np.asarray([s is not None for s in self.slots])
+        tok = jnp.asarray([[s.last_token if s else 0] for s in self.slots],
+                          jnp.int32)
+        # the static-batch loop's own jitted scan body, n_steps=1: one
+        # compile shared with greedy_decode, cache donated in and out
+        toks, self.cache = _greedy_run(
+            self.params, self.cache, tok, jnp.asarray(0, jnp.int32), None,
+            self.cfg, 1, True, kernel_mode())
+        nxt = np.asarray(toks)[0, :, 0]
+        # idle rows advanced their (zero) lengths and wrote garbage to the
+        # scratch page; re-pin them so their walk never grows
+        self.cache["seq_lens"] = jnp.where(
+            jnp.asarray(active), self.cache["seq_lens"], 0)
+        for b, slot in enumerate(self.slots):
+            if slot is not None and not self._finished(slot):
+                slot.last_token = int(nxt[b])
+                slot.generated.append(slot.last_token)
