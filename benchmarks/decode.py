@@ -1,6 +1,8 @@
-"""Decode engine: ms/token + KV pages touched, dense vs paged.
+"""Decode engine: ms/token + KV pages touched + KV bytes/token, dense vs
+paged vs paged-int8.
 
-Two views per (arch, layout) row, mirroring ``benchmarks/flash_attention``:
+Three views per (arch, layout, kv_quant) row, mirroring
+``benchmarks/flash_attention``:
 
   * **pages touched** — analytic ``flash_decode_schedule`` counters: KV
     pages a decode step streams at the batch's final lengths (paged) vs
@@ -9,6 +11,10 @@ Two views per (arch, layout) row, mirroring ``benchmarks/flash_attention``:
     launched page walk.
   * **ms/token** — host wall time of the jitted ``lax.scan`` greedy loop
     (ordering-only on CPU, see benchmarks/common.py), prefill excluded.
+  * **KV bytes/token** — HBM bytes of cache state one decode step streams
+    per sequence: the full rectangle for dense, touched pages ×
+    ``page_nbytes`` for paged (``kv_quant="int8"`` rows show the smaller
+    int8+scales pages through the identical page walk).
 
 The batch mixes prompt lengths (non-page-multiples included) so the
 paged counters show per-sequence savings the dense layout cannot have.
@@ -27,7 +33,7 @@ from repro.kernels.flash_attention.decode import (flash_decode_schedule,
                                                  pages_touched)
 from repro.kernels.tiled_matmul.ops import kernel_mode
 from repro.models.transformer import init_model
-from repro.serving.cache import init_cache
+from repro.serving.cache import init_cache, page_nbytes
 from repro.serving.engine import greedy_decode, prefill
 
 # name, arch, batch, prompt_lens, n_steps, max_len, page_size
@@ -54,9 +60,11 @@ def bench_one(name, arch, batch, prompt_lens, n_steps, max_len, page):
     max_pages = ceil_div(max_len, page)
 
     rows = []
-    for layout in ("dense", "paged"):
+    for layout, kv_quant in (("dense", "none"), ("paged", "none"),
+                             ("paged", "int8")):
         kw = {} if layout == "dense" else {"layout": "paged",
-                                           "page_size": page}
+                                           "page_size": page,
+                                           "kv_quant": kv_quant}
         cache = init_cache(cfg, batch, max_len=max_len, **kw)
         next_logits, cache = prefill(params, cache, prompts, lens, cfg)
         first = jnp.argmax(next_logits, -1)[:, None].astype(jnp.int32)
@@ -92,13 +100,19 @@ def bench_one(name, arch, batch, prompt_lens, n_steps, max_len, page):
                     max_pages, page, window=cfg.sliding_window)) \
                 if frac_local else t_global
             touched = frac_local * t_local + (1 - frac_local) * t_global
+            # page_nbytes spans all layers and both pools (scales
+            # included), matching the all-layer pages_touched counter
+            kv_bytes = touched * page_nbytes(cache) / batch
         else:
             touched = batch * max_pages
+            kv_bytes = (cache["k"].nbytes + cache["v"].nbytes) / batch
         rows.append({
-            "shape": name, "layout": layout, "B": batch,
-            "S_max": max_len, "page": page, "steps": n_steps,
+            "shape": name, "layout": layout, "kv_quant": kv_quant,
+            "B": batch, "S_max": max_len, "page": page, "steps": n_steps,
             "mode": kernel_mode(),
             "ms_per_token": sec * 1e3 / (n_steps * batch),
+            "tok_per_s": (n_steps * batch) / sec,
+            "kv_bytes_per_tok": kv_bytes,
             "pages_touched": touched,
             "pages_dense": batch * max_pages,
             "streamed_frac": touched / (batch * max_pages),
@@ -111,7 +125,8 @@ def main(argv=None) -> None:
     rows = []
     for spec in (SMOKE_SHAPES if args.smoke else SMOKE_SHAPES + SHAPES):
         rows.extend(bench_one(*spec))
-    print_table("paged-KV decode engine (dense vs paged)", rows)
+    print_table("paged-KV decode engine (dense vs paged vs paged-int8)",
+                rows)
     if args.json:
         write_json(args.json, {"decode": rows})
 

@@ -6,6 +6,9 @@ lengths, mixed generation budgets — served two ways:
   * **continuous** — ``serving/scheduler.Scheduler``: admit whenever a
     batch slot and enough pool pages are free, one decode step per tick
     for whatever is live, retire + recycle pages immediately.
+  * **continuous-int8kv** — the same scheduler over an int8 page pool
+    (``kv_quant="int8"``): identical admission/steps, smaller pages —
+    the ``page_bytes`` column shows the per-page HBM cost side by side.
   * **static** — the PR-4 loop as a baseline: group requests into
     batches of ``slots`` in arrival order, run ``prefill`` →
     ``greedy_decode`` to the *longest* budget in the batch, only then
@@ -34,7 +37,7 @@ from repro.configs import get_smoke_config
 from repro.core.tiling import ceil_div
 from repro.kernels.tiled_matmul.ops import kernel_mode
 from repro.models.transformer import init_model
-from repro.serving.cache import init_cache
+from repro.serving.cache import init_cache, page_nbytes
 from repro.serving.engine import greedy_decode, prefill
 from repro.serving.scheduler import Scheduler
 
@@ -66,9 +69,11 @@ def _trace(rng, n_requests, max_len):
     return reqs
 
 
-def _run_continuous(params, cfg, reqs, *, slots, pool, page, max_len):
+def _run_continuous(params, cfg, reqs, *, slots, pool, page, max_len,
+                    kv_quant="none"):
     sched = Scheduler(params, cfg, slots=slots, max_len=max_len,
-                      page_size=page, pool_pages=pool, bucket=8)
+                      page_size=page, pool_pages=pool, bucket=8,
+                      kv_quant=kv_quant)
     pending = sorted(reqs, key=lambda r: r[0])
     t0 = time.perf_counter()
     tick = 0
@@ -83,7 +88,8 @@ def _run_continuous(params, cfg, reqs, *, slots, pool, page, max_len):
     occ = np.asarray(sched.occupancy_log)
     return {"wall_s": sec, "tokens": n_tokens, "steps": tick,
             "pages_peak": int(occ.max()), "pages_mean": float(occ.mean()),
-            "pool": sched.pool_occupancy()[1]}
+            "pool": sched.pool_occupancy()[1],
+            "page_bytes": page_nbytes(sched.cache)}
 
 
 def _run_static(params, cfg, reqs, *, slots, page, max_len):
@@ -93,7 +99,7 @@ def _run_static(params, cfg, reqs, *, slots, page, max_len):
     max_pages = ceil_div(max_len, page)
     t0 = time.perf_counter()
     n_tokens, steps = 0, 0
-    occ = []
+    occ, pb = [], 0
     for i in range(0, len(reqs), slots):
         batch = reqs[i:i + slots]
         b = len(batch)
@@ -105,6 +111,7 @@ def _run_static(params, cfg, reqs, *, slots, page, max_len):
         budgets = [n for _, _, n in batch]
         cache = init_cache(cfg, b, max_len=max_len, dtype=jnp.float32,
                            layout="paged", page_size=page)
+        pb = page_nbytes(cache)
         nl, cache = prefill(params, cache, jnp.asarray(prompts), lens, cfg)
         first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
         n_steps = max(budgets) - 1
@@ -119,7 +126,7 @@ def _run_static(params, cfg, reqs, *, slots, page, max_len):
     occ = np.asarray(occ)
     return {"wall_s": sec, "tokens": n_tokens, "steps": steps,
             "pages_peak": int(occ.max()), "pages_mean": float(occ.mean()),
-            "pool": len(reqs[:slots]) * max_pages}
+            "pool": len(reqs[:slots]) * max_pages, "page_bytes": pb}
 
 
 def bench_one(name, arch, slots, pool, page, max_len, n_requests, seed):
@@ -131,6 +138,9 @@ def bench_one(name, arch, slots, pool, page, max_len, n_requests, seed):
             ("continuous", _run_continuous(params, cfg, reqs, slots=slots,
                                            pool=pool, page=page,
                                            max_len=max_len)),
+            ("continuous-int8kv", _run_continuous(
+                params, cfg, reqs, slots=slots, pool=pool, page=page,
+                max_len=max_len, kv_quant="int8")),
             ("static", _run_static(params, cfg, reqs, slots=slots,
                                    page=page, max_len=max_len))):
         rows.append({
@@ -142,6 +152,7 @@ def bench_one(name, arch, slots, pool, page, max_len, n_requests, seed):
             "pages_mean": round(res["pages_mean"], 1),
             "pool_pages": res["pool"],
             "occupancy_frac": round(res["pages_mean"] / res["pool"], 3),
+            "page_bytes": res["page_bytes"],
         })
     return rows
 

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 __all__ = [
     "QTensor",
     "quantize",
+    "quantize_kv",
     "dequantize",
     "fake_quantize",
     "Calibrator",
@@ -101,6 +102,21 @@ def quantize(x: jax.Array, *, channel_axes: Sequence[int] = (), bits: int = 8,
 
 def dequantize(q: QTensor, dtype=jnp.float32) -> jax.Array:
     return (q.values.astype(jnp.float32) * q.scale).astype(dtype)
+
+
+def quantize_kv(x: jax.Array, *, bits: int = 8):
+    """Quantize K/V rows for the serving cache's int8 page pool.
+
+    One symmetric absmax scale per vector on the trailing (head_dim)
+    axis — i.e. per (token, kv-head) for the cache's ``(…, KVH, hd)``
+    layout, matching the per-page-slot-per-head scale rows that ride the
+    page table (``serving/cache.py``).  Returns ``(values int8, scales
+    f32)`` with ``scales.shape == x.shape[:-1]`` (no keepdim — the scale
+    pools store one f32 per row), so ``values.astype(f32) *
+    scales[..., None]`` dequantizes exactly.
+    """
+    q = quantize(x, channel_axes=tuple(range(x.ndim - 1)), bits=bits)
+    return q.values, q.scale[..., 0]
 
 
 def fake_quantize(x: jax.Array, *, channel_axes: Sequence[int] = (),

@@ -164,9 +164,15 @@ def pages_touched(lengths, sched: FlashDecodeSchedule) -> int:
     return total
 
 
-def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                   acc_ref, m_ref, l_ref, *, scale, window, softcap,
-                   sched: FlashDecodeSchedule, kh, out_dtype):
+def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, *rest, scale,
+                   window, softcap, sched: FlashDecodeSchedule, kh,
+                   out_dtype, quant: bool):
+    if quant:
+        # the int8 layout streams two extra per-page operands: the
+        # (1, ps, 1) scale rows riding the same clamped page walk
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     n = pl.program_id(0)
     i = pl.program_id(1)
     jj = pl.program_id(2)
@@ -189,6 +195,12 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].reshape(g * qc, q_ref.shape[-1])    # (g·qc, D)
         k = k_ref[0, :, 0, :]               # (ps, D)
         v = v_ref[0, :, 0, :]               # (ps, D)
+        if quant:
+            # fused dequant: values·scale in f32, right off the DMA — the
+            # fp page never exists in HBM (only this VMEM tile does)
+            k = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+            v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+            q = q.astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
@@ -233,6 +245,8 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
                         window: int | None = None,
                         softcap: float | None = None,
                         q_chunk: int | None = None,
+                        k_scales: jax.Array | None = None,
+                        v_scales: jax.Array | None = None,
                         out_dtype=None, interpret: bool = False):
     """Paged flash attention over a page pool.  Shapes:
 
@@ -250,11 +264,25 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
     of q_len in one block — right for decode-sized steps); the page
     table and lengths travel via scalar prefetch so the KV index map
     resolves physical pages before each DMA.
+
+    ``k_scales``/``v_scales`` (P, page, KH) f32 select the quantized
+    layout (``kv_quant="int8"``): the pools hold int8 rows and the scale
+    pools stream alongside them through the *same* clamped page walk —
+    one (1, ps, 1) scale row per KV page block — with dequantization
+    (``values.astype(f32) * scale``) fused into the kernel body ahead of
+    the QK/PV contractions.  The fp pages never materialize in HBM; the
+    per-step KV bytes drop to ``1 + 4/D`` per element vs 2 for bf16.
     """
     b, h, qs, d = q.shape
     p_total, ps, kh, dk = k_pages.shape
     assert d == dk and h % kh == 0, (q.shape, k_pages.shape)
     assert v_pages.shape == k_pages.shape
+    quant = k_scales is not None
+    assert quant == (v_scales is not None), "need both scale pools or neither"
+    if quant:
+        assert k_scales.shape == (p_total, ps, kh), (
+            k_scales.shape, k_pages.shape)
+        assert v_scales.shape == k_scales.shape
     max_pages = page_table.shape[1]
     assert page_table.shape == (b, max_pages)
     g = h // kh
@@ -278,17 +306,29 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
         # clamped sparse walk: trailing steps revisit j_hi (copy elided)
         return (pt_ref[sb, jnp.minimum(j_lo + jj, j_hi)], 0, n % kh, 0)
 
+    def scale_index(n, i, jj, pt_ref, len_ref):
+        # the scale row of exactly the page the KV walk fetches
+        sb = n // kh
+        j_lo, j_hi = bounds(len_ref[sb], i)
+        return (pt_ref[sb, jnp.minimum(j_lo + jj, j_hi)], 0, n % kh)
+
     kernel = functools.partial(
         _decode_kernel, scale=scale, window=window, softcap=softcap,
-        sched=sched, kh=kh, out_dtype=out_dtype)
+        sched=sched, kh=kh, out_dtype=out_dtype, quant=quant)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, qc, d), q_index),
+        pl.BlockSpec((1, ps, 1, d), kv_index),
+        pl.BlockSpec((1, ps, 1, d), kv_index),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_index),
+                     pl.BlockSpec((1, ps, 1), scale_index)]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b * kh, sched.num_q_blocks, sched.max_steps),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, qc, d), q_index),
-            pl.BlockSpec((1, ps, 1, d), kv_index),
-            pl.BlockSpec((1, ps, 1, d), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, qc, d), q_index),
         scratch_shapes=[
             pltpu.VMEM((g * qc, d), jnp.float32),
@@ -300,6 +340,5 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kh, g, qs, d), out_dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pages, v_pages)
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
     return out.reshape(b, h, qs, d)

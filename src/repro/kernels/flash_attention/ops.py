@@ -64,6 +64,8 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            window: int | None = None,
                            softcap: float | None = None,
                            q_chunk: int | None = None,
+                           k_scales: jax.Array | None = None,
+                           v_scales: jax.Array | None = None,
                            mode: str | None = None) -> jax.Array:
     """Attention over a paged KV cache (always causal).
 
@@ -74,6 +76,11 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     *including* the new tokens (their K/V already committed).  Returns
     (B, q_len, H, D).  ``q_chunk`` bounds the q rows resident per kernel
     block (multi-query-row steps; ignored by the dense oracle).
+
+    ``k_scales``/``v_scales`` (P, page, KH) f32 select the quantized
+    ``kv_quant="int8"`` layout: int8 pools with per-row absmax scales,
+    dequantized in-kernel (or inside the gather for the ref oracle) with
+    the bitwise-identical ``values.astype(f32) * scale``.
 
     Lowers to the paged flash kernel (``decode.py``) under
     ``pallas``/``pallas_interpret`` — a length-aware page walk that
@@ -90,10 +97,12 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     if mode == "ref":
         o = _ref.paged_attention_ref(qh, k_pages, v_pages, page_table,
                                      lengths, scale=scale, window=window,
-                                     softcap=softcap)
+                                     softcap=softcap, k_scales=k_scales,
+                                     v_scales=v_scales)
     else:
         o = paged_decode_kernel(qh, k_pages, v_pages, page_table, lengths,
                                 scale=scale, window=window, softcap=softcap,
-                                q_chunk=q_chunk,
+                                q_chunk=q_chunk, k_scales=k_scales,
+                                v_scales=v_scales,
                                 interpret=(mode == "pallas_interpret"))
     return o.transpose(0, 2, 1, 3)

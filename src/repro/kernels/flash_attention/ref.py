@@ -59,11 +59,32 @@ def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
     return pages[page_table].reshape(b, max_pages * page, kh, d)
 
 
+def paged_gather_scales(scales: jnp.ndarray,
+                        page_table: jnp.ndarray) -> jnp.ndarray:
+    """Gather the per-(page-slot, kv-head) scale rows of a quantized pool.
+
+    scales (P, page, KH) f32; page_table (B, max_pages) int32 →
+    (B, max_pages·page, KH) — token order matching ``paged_gather``.
+    """
+    b, max_pages = page_table.shape
+    _, page, kh = scales.shape
+    return scales[page_table].reshape(b, max_pages * page, kh)
+
+
+def dequantize_gathered(values: jnp.ndarray,
+                        scales: jnp.ndarray) -> jnp.ndarray:
+    """(B, T, KH, D) int8 values × (B, T, KH) scales → f32, the exact
+    dequant the paged decode kernel fuses in-kernel (values·scale, f32)."""
+    return values.astype(jnp.float32) * scales[..., None]
+
+
 def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, page_table: jnp.ndarray,
                         lengths: jnp.ndarray, *, scale: float,
                         window: int | None = None,
-                        softcap: float | None = None) -> jnp.ndarray:
+                        softcap: float | None = None,
+                        k_scales: jnp.ndarray | None = None,
+                        v_scales: jnp.ndarray | None = None) -> jnp.ndarray:
     """Dense decode / chunked-prefill oracle over a paged cache.
 
     q (B, H, q_len, D); pools (P, page, KH, D); lengths (B,) int32 is the
@@ -75,12 +96,21 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     chunk — this is the oracle for every q-block schedule the paged
     kernel launches (``q_chunk`` only changes the kernel's blocking,
     never the math).
+
+    ``k_scales``/``v_scales`` (P, page, KH) f32 make this the quantized
+    oracle: the int8 pools are gathered and dequantized row-wise
+    (``values.astype(f32) * scale``) — the bitwise-specified dequant the
+    kernel fuses into its page walk.
     """
     b, h, qs, d = q.shape
     kh = k_pages.shape[2]
     g = h // kh
     k = paged_gather(k_pages, page_table)           # (B, T, KH, D)
     v = paged_gather(v_pages, page_table)
+    if k_scales is not None:
+        k = dequantize_gathered(k, paged_gather_scales(k_scales, page_table))
+    if v_scales is not None:
+        v = dequantize_gathered(v, paged_gather_scales(v_scales, page_table))
     t_len = k.shape[1]
     qg = q.reshape(b, kh, g, qs, d)
     s = jnp.einsum("bkgsd,btkd->bkgst", qg, k,

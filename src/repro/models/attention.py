@@ -185,8 +185,14 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
     """Paged-cache decode step: scatter new kv into pages, attend, project.
 
     q (B,S,H,hd), k/v (B,S,K,hd) — already rope'd; cache (k_pages,
-    v_pages) each (P, page, K, hd); cache_pos (B,) per-sequence lengths
-    before the write.  Under ``attn_impl`` ∈ {auto (Pallas live), flash}
+    v_pages) each (P, page, K, hd), or (k_pages, v_pages, k_scales,
+    v_scales) for the ``kv_quant="int8"`` layout (int8 pools + (P, page,
+    K) f32 scale rows); cache_pos (B,) per-sequence lengths before the
+    write.  Quantized layouts quantize each new row per (token, kv-head)
+    (``core.quantization.quantize_kv``) and scatter values and scales
+    through the same page-table indices — the read side dequantizes
+    in-kernel (flash) or inside the gather (fallback), so fp pages never
+    materialize.  Under ``attn_impl`` ∈ {auto (Pallas live), flash}
     every step routes through the paged flash kernel: decode-sized steps
     (S ≤ ``PAGED_FLASH_MAX_Q``) as one q block, longer cache-writing
     steps (chunked paged prefill) tiled into ``PAGED_PREFILL_CHUNK_Q``
@@ -194,12 +200,24 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
     ``attn_impl="jnp"`` (or no Pallas) gathers the pages into a dense
     cache and reuses the jnp decode path (the parity oracle).
     """
-    ck, cv = cache
+    quant = len(cache) == 4
+    ck, cv = cache[0], cache[1]
     page = ck.shape[1]
     tok_pos = cache_pos[:, None] + jnp.arange(s)[None, :]       # (B, S)
     pidx = jnp.take_along_axis(page_table, tok_pos // page, axis=1)
-    ck = ck.at[pidx, tok_pos % page].set(k.astype(ck.dtype))
-    cv = cv.at[pidx, tok_pos % page].set(v.astype(cv.dtype))
+    if quant:
+        from repro.core.quantization import quantize_kv
+        cks, cvs = cache[2], cache[3]
+        kq, k_sc = quantize_kv(k)             # (B,S,K,hd) int8, (B,S,K) f32
+        vq, v_sc = quantize_kv(v)
+        ck = ck.at[pidx, tok_pos % page].set(kq)
+        cv = cv.at[pidx, tok_pos % page].set(vq)
+        cks = cks.at[pidx, tok_pos % page].set(k_sc)
+        cvs = cvs.at[pidx, tok_pos % page].set(v_sc)
+    else:
+        cks = cvs = None
+        ck = ck.at[pidx, tok_pos % page].set(k.astype(ck.dtype))
+        cv = cv.at[pidx, tok_pos % page].set(v.astype(cv.dtype))
     lengths = cache_pos + s
 
     if _flash_engine_live(cfg):
@@ -209,15 +227,22 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
         def _pdec(window):
             return paged_decode_attention(
                 q, ck, cv, page_table, lengths, scale=scale, window=window,
-                softcap=cfg.attn_logit_softcap, q_chunk=q_chunk)
+                softcap=cfg.attn_logit_softcap, q_chunk=q_chunk,
+                k_scales=cks, v_scales=cvs)
 
         o = _run_windowed(_pdec, cfg, is_local)
     else:
-        from repro.kernels.flash_attention.ref import paged_gather
+        from repro.kernels.flash_attention.ref import (
+            dequantize_gathered, paged_gather, paged_gather_scales)
         kh = cfg.n_kv_heads
         g = cfg.n_heads // kh
         kd = paged_gather(ck, page_table)                       # (B,T,K,hd)
         vd = paged_gather(cv, page_table)
+        if quant:
+            kd = dequantize_gathered(
+                kd, paged_gather_scales(cks, page_table))
+            vd = dequantize_gathered(
+                vd, paged_gather_scales(cvs, page_table))
         o = _attend_dense(q.reshape(b, s, kh, g, cfg.head_dim), kd, vd,
                           tok_pos, jnp.arange(kd.shape[1]), scale=scale,
                           cap=cfg.attn_logit_softcap, causal=True,
@@ -225,7 +250,8 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
 
     o = o.reshape(b, s, cfg.q_dim)
     y = apply_linear(params["wo"], o, mode=cfg.quant_proj)
-    return y, (ck, cv)
+    new_cache = (ck, cv, cks, cvs) if quant else (ck, cv)
+    return y, new_cache
 
 
 def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
@@ -233,7 +259,7 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
                     is_local=False,
                     causal: bool = True,
                     memory: jax.Array | None = None,
-                    cache: tuple[jax.Array, jax.Array] | None = None,
+                    cache: tuple | None = None,
                     cache_pos: jax.Array | None = None,
                     page_table: jax.Array | None = None):
     """Self- or cross-attention.
@@ -248,12 +274,13 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
         batches); new kv is written there and attention runs over the
         cache with per-sequence causal masking.
       * paged — ``page_table`` (B, max_pages) int32 is given and cache is
-        (k_pages, v_pages) each (P, page, K, hd); ``cache_pos`` (B,) holds
-        per-sequence lengths *before* this step.  New kv is scattered into
-        each sequence's pages and attention routes through the paged
-        flash-decode schedule (``kernels/flash_attention/decode.py``) when
-        ``cfg.attn_impl`` selects the flash engine, else through a dense
-        gather fallback.
+        (k_pages, v_pages) each (P, page, K, hd) — or (k_pages, v_pages,
+        k_scales, v_scales) for the int8-quantized page layout;
+        ``cache_pos`` (B,) holds per-sequence lengths *before* this step.
+        New kv is scattered into each sequence's pages and attention
+        routes through the paged flash-decode schedule
+        (``kernels/flash_attention/decode.py``) when ``cfg.attn_impl``
+        selects the flash engine, else through a dense gather fallback.
 
     Returns (y, new_cache or None).
     """

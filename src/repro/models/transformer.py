@@ -14,6 +14,7 @@ One ``init_model`` / ``apply_model`` pair driven by ``ModelConfig``:
 Cache convention (decode) — see serving/cache.py + docs/DESIGN.md:
   dense:  {"k","v"}: (L, B, S_max, KVH, hd)     attention layers
   paged:  {"k_pages","v_pages"}: (L, P, page, KVH, hd) page pools,
+          {"k_scales","v_scales"}: (L, P, page, KVH) f32 (kv_quant="int8"),
           {"page_table"}: (B, max_pages) int32, {"seq_lens"}: (B,) int32
   {"shared_k","shared_v"}: (A, B, S_max, KVH, hd)   zamba2 shared block
   {"ssm_h"}: (L, B, H, P, N) f32; {"conv_x","conv_B","conv_C"} conv tails
@@ -157,13 +158,19 @@ def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
     flags = _local_flags(cfg)
     decode = cache is not None
     paged = decode and "k_pages" in cache
+    quant = paged and "k_scales" in cache
     page_table = cache["page_table"] if paged else None
+    # per-layer page state threaded through the scan as xs (the quantized
+    # layout adds its scale pools, which travel with their int8 pages)
+    kv_keys = (("k_pages", "v_pages", "k_scales", "v_scales") if quant
+               else ("k_pages", "v_pages") if paged
+               else ("k", "v") if decode else ())
 
     def body(carry, xs):
         x, aux_sum = carry
         if decode:
-            lp, flag, ck, cv = xs
-            cache_kv = (ck, cv)
+            lp, flag = xs[0], xs[1]
+            cache_kv = xs[2:]
         else:
             lp, flag = xs
             cache_kv = None
@@ -180,23 +187,17 @@ def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
     if cfg.remat == "block":
         body = jax.checkpoint(body)
 
-    if paged:
-        xs = (params["layers"], flags, cache["k_pages"], cache["v_pages"])
-    elif decode:
-        xs = (params["layers"], flags, cache["k"], cache["v"])
-    else:
-        xs = (params["layers"], flags)
+    xs = (params["layers"], flags) + tuple(cache[k] for k in kv_keys)
     (x, aux_sum), new_kvs = jax.lax.scan(body, (x, 0.0), xs)
     new_cache = None
     if paged:
         # layer-independent state (page table, allocator arrays, …) rides
         # along untouched; seq_lens is stamped by apply_model (it knows
         # how many tokens were committed)
-        new_cache = {k: v for k, v in cache.items()
-                     if k not in ("k_pages", "v_pages")}
-        new_cache["k_pages"], new_cache["v_pages"] = new_kvs[0], new_kvs[1]
+        new_cache = {k: v for k, v in cache.items() if k not in kv_keys}
+        new_cache.update(zip(kv_keys, new_kvs))
     elif decode:
-        new_cache = {"k": new_kvs[0], "v": new_kvs[1]}
+        new_cache = dict(zip(kv_keys, new_kvs))
     return x, aux_sum, new_cache
 
 

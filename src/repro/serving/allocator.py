@@ -244,14 +244,17 @@ def fork_sequence(cache: dict, parent: int, child: int, prefix_len: int,
                               SCRATCH_PAGE))
     # eager CoW: copy the parent's partially-committed pages (just the
     # boundary page, or every prefix page under copy=True) into the
-    # child's private ids before any child write can land there
+    # child's private ids before any child write can land there.  The
+    # copy spans every per-page array — a quantized pool's scale rows
+    # must travel with their int8 pages or the child would dequantize
+    # the copied prefix with stale scales.
+    from repro.serving.cache import PAGE_STATE_KEYS
     for c in range(copied_pages):
         src = cache["page_table"][parent, full + c]
         dst = row[full + c]
-        cache["k_pages"] = cache["k_pages"].at[:, dst].set(
-            cache["k_pages"][:, src])
-        cache["v_pages"] = cache["v_pages"].at[:, dst].set(
-            cache["v_pages"][:, src])
+        for key in PAGE_STATE_KEYS:
+            if key in cache:
+                cache[key] = cache[key].at[:, dst].set(cache[key][:, src])
     cache["page_table"] = cache["page_table"].at[child].set(row)
     cache["seq_lens"] = cache["seq_lens"].at[child].set(prefix_len)
     cache["alloc_held"] = cache["alloc_held"].at[child].set(total)

@@ -13,6 +13,11 @@ Two attention-cache layouts behind one ``init_cache`` API (see
 **paged** — fixed-size KV pages in a shared pool plus per-sequence page
 tables (attention families only; the SSM state is already O(1)):
   k_pages/v_pages  (L, n_pages, page_size, KVH, hd)
+  k_scales/v_scales(L, n_pages, page_size, KVH) f32 — ``kv_quant="int8"``
+                   only: per-(page-slot, kv-head) symmetric absmax scales
+                   for the int8 pools; they ride the *same* page table,
+                   so everything that moves pages (CoW, prefix sharing)
+                   moves their scale rows with them
   page_table       (B, max_pages) int32 — physical page id of logical page
                    j of sequence b; rows' *writable* page sets are disjoint
   seq_lens         (B,) int32 — tokens currently committed per sequence
@@ -42,6 +47,11 @@ from repro.core.tiling import ceil_div
 from repro.models.config import ModelConfig
 
 DEFAULT_PAGE_SIZE = 64
+
+# every per-page array of the paged layout: whatever copies / forks /
+# scatters physical pages must treat these together (scale rows travel
+# with their int8 pages — docs/DESIGN.md §2)
+PAGE_STATE_KEYS = ("k_pages", "v_pages", "k_scales", "v_scales")
 
 
 def n_shared_sites(cfg: ModelConfig) -> int:
@@ -81,7 +91,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, layout: str = "dense",
                page_size: int = DEFAULT_PAGE_SIZE,
                alloc: str = "contiguous",
-               pool_pages: int | None = None) -> dict:
+               pool_pages: int | None = None,
+               kv_quant: str = "none") -> dict:
     """Zero-initialised decode cache for ``batch`` sequences of up to
     ``max_len`` tokens.
 
@@ -89,7 +100,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
       cfg: model config (family decides which state tensors exist).
       batch: number of concurrent sequences B.
       max_len: maximum context length S_max a sequence may reach.
-      dtype: KV storage dtype (bf16 serving default; SSM state stays f32).
+      dtype: KV storage dtype (bf16 serving default; all SSM state —
+        ``ssm_h`` and the ``conv_*`` tails — stays f32: the recurrence
+        and the decode-time conv window accumulate across steps, so
+        their state dtype is an accuracy contract, not a serving knob).
       layout: ``"dense"`` (seed rectangular buffers) or ``"paged"``
         (fixed-size KV pages + per-sequence page tables; attention
         families only).
@@ -104,6 +118,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         ``batch * ceil(max_len / page_size)``).  With ``alloc="dynamic"``
         the pool may be smaller than the worst-case rectangle — prefix
         sharing and admission control are what make that safe.
+      kv_quant: ``"none"`` (pages stored in ``dtype``) or ``"int8"``
+        (paged layout only): pages are int8 pools and per-(page-slot,
+        kv-head) f32 absmax scales ride the same page table as
+        ``k_scales``/``v_scales``.  Dequantization is fused into the
+        attention read (in-kernel for the flash path) — fp pages never
+        materialize.  Roughly halves page bytes vs bf16
+        (``1 + 4/head_dim`` vs 2 bytes per element).
 
     Returns a dict of arrays (shapes in the module docstring).  The paged
     dict additionally carries ``page_table`` (B, max_pages) int32 and
@@ -113,6 +134,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     """
     if layout not in ("dense", "paged"):
         raise ValueError(f"unknown cache layout {layout!r}")
+    if kv_quant not in ("none", "int8"):
+        raise ValueError(f"unknown kv_quant {kv_quant!r} "
+                         "(expected 'none' or 'int8')")
+    if kv_quant != "none" and layout != "paged":
+        raise ValueError(
+            f"kv_quant={kv_quant!r} requires layout='paged': the scale "
+            "rows ride the page table, and the dense decode path has no "
+            "fused dequant")
     cache: dict = {}
     if cfg.family in ("ssm", "hybrid"):
         if layout == "paged":
@@ -123,9 +152,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         p, n = cfg.ssm_head_dim, cfg.ssm_state
         k = cfg.ssm_conv - 1
         cache["ssm_h"] = jnp.zeros((l, batch, h, p, n), jnp.float32)
-        cache["conv_x"] = jnp.zeros((l, batch, k, cfg.d_inner), dtype)
-        cache["conv_B"] = jnp.zeros((l, batch, k, n), dtype)
-        cache["conv_C"] = jnp.zeros((l, batch, k, n), dtype)
+        cache["conv_x"] = jnp.zeros((l, batch, k, cfg.d_inner), jnp.float32)
+        cache["conv_B"] = jnp.zeros((l, batch, k, n), jnp.float32)
+        cache["conv_C"] = jnp.zeros((l, batch, k, n), jnp.float32)
         sites = n_shared_sites(cfg)
         if sites:
             cache["shared_k"] = jnp.zeros(
@@ -134,10 +163,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     elif layout == "paged":
         max_pages = ceil_div(max_len, page_size)
         n_pages = pool_pages if pool_pages is not None else batch * max_pages
+        pool_dtype = jnp.int8 if kv_quant == "int8" else dtype
         cache["k_pages"] = jnp.zeros(
             (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
-            dtype)
+            pool_dtype)
         cache["v_pages"] = jnp.zeros_like(cache["k_pages"])
+        if kv_quant == "int8":
+            # zero scales dequantize the zero-initialised pool to exact
+            # zeros — indistinguishable from the fp layout's fresh pages
+            cache["k_scales"] = jnp.zeros(
+                (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads),
+                jnp.float32)
+            cache["v_scales"] = jnp.zeros_like(cache["k_scales"])
         if alloc == "dynamic":
             from repro.serving.allocator import SCRATCH_PAGE, attach_allocator
             cache["page_table"] = jnp.full((batch, max_pages), SCRATCH_PAGE,
@@ -160,8 +197,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def page_nbytes(cache: dict) -> int:
+    """HBM bytes one physical page occupies across all layers: K+V values
+    plus, for the ``kv_quant="int8"`` layout, their scale rows.  This is
+    the unit of the decode benchmarks' bytes/token accounting and of the
+    allocator's admission math (a pool page is this many bytes whether
+    the pool is bf16 or int8 — quantization shrinks the *unit*, so the
+    same pool array serves ~2x the tokens per byte)."""
+    n_pages = cache["k_pages"].shape[1]
+    total = sum(cache[k].nbytes for k in PAGE_STATE_KEYS if k in cache)
+    return total // n_pages
+
+
 def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
-                       layout: str = "dense", dynamic: bool = False) -> dict:
+                       layout: str = "dense", dynamic: bool = False,
+                       kv_quant: str = "none") -> dict:
     """Logical axes per cache array (``docs/DESIGN.md`` §3).
 
     ``kv_shard``: ``auto | heads | seq`` — ``seq`` means the dense cache's
@@ -169,6 +219,8 @@ def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
     ``dynamic`` adds the ``alloc_*`` allocator arrays (replicated: the
     free list / refcounts are tiny int32 control state that every chip
     needs whole — only ``alloc_held`` is per-sequence and follows batch).
+    ``kv_quant="int8"`` adds the scale pools, sharded exactly like their
+    int8 pages minus the trailing head_dim axis.
     """
     axes: dict = {}
     if cfg.family in ("ssm", "hybrid"):
@@ -188,6 +240,9 @@ def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
                  None, kv[3], None)
         axes["k_pages"] = paged
         axes["v_pages"] = paged
+        if kv_quant == "int8":
+            axes["k_scales"] = paged[:-1]          # (L, P, page, KVH)
+            axes["v_scales"] = paged[:-1]
         axes["page_table"] = ("batch", None)
         axes["seq_lens"] = ("batch",)
         if dynamic:

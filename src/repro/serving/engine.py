@@ -48,6 +48,52 @@ def prefill_step(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     return logits, aux
 
 
+def validate_decode_cache(cache: dict, cfg: ModelConfig,
+                          mode: str | None = None) -> None:
+    """Fail loudly on cache layouts the decode path cannot execute.
+
+    The serving loop donates the cache into a jitted scan — a layout the
+    attention routing does not understand would not crash there, it would
+    *silently compute garbage* (e.g. int8 pages without scale pools would
+    be read as raw integers).  Every serving entry point calls this before
+    touching the cache, so unsupported kernel-mode/layout/quant
+    combinations raise a ``NotImplementedError`` naming the combo instead
+    of producing a wrong-result path.  All checks are on dtypes and keys
+    (static metadata), so the call is trace-safe and free.
+    """
+    if mode is None:
+        from repro.kernels.tiled_matmul.ops import kernel_mode
+        mode = kernel_mode()
+    if "k_pages" in cache:
+        kd, vd = cache["k_pages"].dtype, cache["v_pages"].dtype
+        has_scales = "k_scales" in cache or "v_scales" in cache
+        combo = (f"kernel_mode={mode!r}, layout='paged', "
+                 f"kv dtype {kd}, kv_quant="
+                 f"{'int8' if has_scales else 'none'}")
+        if jnp.issubdtype(kd, jnp.integer) and not has_scales:
+            raise NotImplementedError(
+                f"unsupported decode cache combo ({combo}): integer KV "
+                "pages need their k_scales/v_scales pools — build the "
+                "cache with init_cache(..., kv_quant='int8')")
+        if has_scales:
+            if "k_scales" not in cache or "v_scales" not in cache:
+                raise NotImplementedError(
+                    f"unsupported decode cache combo ({combo}): the "
+                    "quantized page layout needs BOTH k_scales and "
+                    "v_scales")
+            if kd != jnp.int8 or vd != jnp.int8:
+                raise NotImplementedError(
+                    f"unsupported decode cache combo ({combo}): scale "
+                    "pools are present but the pages are not int8 — "
+                    "kv_quant='int8' stores int8 pools")
+    elif "k" in cache and jnp.issubdtype(cache["k"].dtype, jnp.integer):
+        raise NotImplementedError(
+            f"unsupported decode cache combo (kernel_mode={mode!r}, "
+            f"layout='dense', kv dtype {cache['k'].dtype}): quantized KV "
+            "is only implemented for the paged layout "
+            "(init_cache(..., layout='paged', kv_quant='int8'))")
+
+
 def cache_capacity(cache: dict) -> int | None:
     """Token capacity of a decode cache, or None for pure-SSM state
     (O(1) in context length — no positional capacity to exceed)."""
@@ -95,6 +141,7 @@ def prefill(params: Params, cache: dict, prompts: jax.Array,
     for the paged layout).
     """
     b, s_pad = prompts.shape
+    validate_decode_cache(cache, cfg)
     capacity = cache_capacity(cache)
     if capacity is not None and start_pos + s_pad > capacity:
         # past capacity the paged scatter would clamp to the last page and
@@ -151,6 +198,7 @@ def serve_step(params: Params, cache: dict, tokens: jax.Array,
     selects the flash engine (``auto`` + live Pallas kernels, or
     ``flash``), else the dense gather fallback.
     """
+    validate_decode_cache(cache, cfg)
     if pos is None:
         if "seq_lens" not in cache:
             raise ValueError("pos=None requires a paged cache carrying "
@@ -179,6 +227,9 @@ def greedy_decode(params: Params, cache: dict, first_token: jax.Array,
     if from_cache_lens and "seq_lens" not in cache:
         raise ValueError("start_pos=None requires a paged cache")
     from repro.kernels.tiled_matmul.ops import kernel_mode
+    # the donated-cache scan would otherwise *silently* mis-read an
+    # unsupported layout (e.g. int8 pages without scales) — fail here
+    validate_decode_cache(cache, cfg, kernel_mode())
     pos_arg = jnp.asarray(0 if from_cache_lens else start_pos, jnp.int32)
     toks, cache = _greedy_run(params, cache, first_token, pos_arg, memory,
                               cfg, n_steps, from_cache_lens, kernel_mode())

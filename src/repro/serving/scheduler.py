@@ -91,6 +91,10 @@ class Scheduler:
       bucket: prompts are right-padded to a multiple of this before
         prefill (bounds the number of traced prefill shapes).
       eos_id: optional early-stop token id.
+      kv_quant: ``"none"`` or ``"int8"`` — the page pool's storage
+        scheme (``serving/cache.init_cache``).  int8 pools roughly halve
+        page bytes, so the same ``pool_pages`` serves ~2x the tokens per
+        HBM byte; prefix sharing and CoW carry the scale rows along.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
@@ -98,14 +102,16 @@ class Scheduler:
                  pool_pages: int | None = None,
                  prefill_chunk: int | None = None,
                  share_prefix: bool = True, bucket: int = 16,
-                 eos_id: int | None = None, dtype=jnp.float32):
+                 eos_id: int | None = None, dtype=jnp.float32,
+                 kv_quant: str = "none"):
         self.params, self.cfg = params, cfg
         self.page_size, self.bucket = page_size, bucket
         self.prefill_chunk, self.share_prefix = prefill_chunk, share_prefix
         self.eos_id = eos_id
         self.cache = init_cache(cfg, slots, max_len, dtype=dtype,
                                 layout="paged", page_size=page_size,
-                                alloc="dynamic", pool_pages=pool_pages)
+                                alloc="dynamic", pool_pages=pool_pages,
+                                kv_quant=kv_quant)
         self.slots: list[_Slot | None] = [None] * slots
         self.queue: deque[Request] = deque()
         self.finished: dict[int, np.ndarray] = {}
@@ -246,8 +252,10 @@ class Scheduler:
             self.params, view, jnp.asarray(padded[None]),
             jnp.asarray([prompt.size], jnp.int32), self.cfg,
             chunk=self.prefill_chunk, start_pos=start)
-        self.cache["k_pages"] = view["k_pages"]
-        self.cache["v_pages"] = view["v_pages"]
+        from repro.serving.cache import PAGE_STATE_KEYS
+        for key in PAGE_STATE_KEYS:
+            if key in view:
+                self.cache[key] = view[key]
         self.cache["seq_lens"] = self.cache["seq_lens"].at[b].set(
             view["seq_lens"][0])
         return int(jnp.argmax(nl[0]))
