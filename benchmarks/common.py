@@ -19,15 +19,19 @@ import numpy as np
 from repro.core.tiling import PEAK_INT8_OPS, TilePlan
 
 
-def bench_options(argv=None, description: str | None = None):
+def bench_options(argv=None, description: str | None = None, extra=None):
     """Shared CLI for benchmark modules: ``--smoke`` (reduced shapes /
     iterations for the CI benchmark-smoke job) and ``--json PATH`` (append
-    this run's tables to a JSON artifact, e.g. ``BENCH_ci.json``)."""
+    this run's tables to a JSON artifact, e.g. ``BENCH_ci.json``).
+    ``extra`` is an optional callback adding module-specific arguments to
+    the parser before parsing (e.g. serving's ``--mesh``)."""
     p = argparse.ArgumentParser(description=description)
     p.add_argument("--smoke", action="store_true",
                    help="reduced shapes/iters for CI smoke tracking")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="append result tables to this JSON file")
+    if extra is not None:
+        extra(p)
     return p.parse_args(argv)
 
 

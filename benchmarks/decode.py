@@ -33,7 +33,7 @@ from repro.kernels.flash_attention.decode import (flash_decode_schedule,
                                                  pages_touched)
 from repro.kernels.tiled_matmul.ops import kernel_mode
 from repro.models.transformer import init_model
-from repro.serving.cache import init_cache, page_nbytes
+from repro.serving.cache import CacheConfig, init_cache, page_nbytes
 from repro.serving.engine import greedy_decode, prefill
 
 # name, arch, batch, prompt_lens, n_steps, max_len, page_size
@@ -62,10 +62,10 @@ def bench_one(name, arch, batch, prompt_lens, n_steps, max_len, page):
     rows = []
     for layout, kv_quant in (("dense", "none"), ("paged", "none"),
                              ("paged", "int8")):
-        kw = {} if layout == "dense" else {"layout": "paged",
-                                           "page_size": page,
-                                           "kv_quant": kv_quant}
-        cache = init_cache(cfg, batch, max_len=max_len, **kw)
+        cc = (CacheConfig() if layout == "dense" else
+              CacheConfig(layout="paged", page_size=page,
+                          kv_quant=kv_quant))
+        cache = init_cache(cfg, batch, max_len=max_len, config=cc)
         next_logits, cache = prefill(params, cache, prompts, lens, cfg)
         first = jnp.argmax(next_logits, -1)[:, None].astype(jnp.int32)
         start = lens if layout == "dense" else None

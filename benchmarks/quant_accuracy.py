@@ -22,7 +22,7 @@ from repro.core.quantize_params import quantize_model_params
 from repro.core.quantized_linear import (apply_linear, init_linear,
                                          quantize_linear)
 from repro.models.transformer import apply_model, init_model
-from repro.serving.cache import init_cache, page_nbytes
+from repro.serving.cache import CacheConfig, init_cache, page_nbytes
 from repro.serving.engine import greedy_decode, prefill, serve_step
 
 # minimum top-1 agreement per quantized path, set from measured smoke
@@ -105,15 +105,17 @@ def run_kv() -> list[dict]:
 
     # fp path defines the forcing sequence
     fp_cache = init_cache(cfg, b, max_len=32, dtype=jnp.float32,
-                          layout="paged", page_size=8, alloc="striped")
+                          config=CacheConfig(layout="paged", page_size=8,
+                                             alloc="striped"))
     fp_nl, fp_cache = prefill(params, fp_cache, tokens, lens, cfg)
     first = jnp.argmax(fp_nl, -1)[:, None].astype(jnp.int32)
     forced, fp_cache = greedy_decode(params, fp_cache, first, None, steps,
                                      cfg)                 # (b, steps+1)
 
     q_cache = init_cache(cfg, b, max_len=32, dtype=jnp.float32,
-                         layout="paged", page_size=8, alloc="striped",
-                         kv_quant="int8")
+                         config=CacheConfig(layout="paged", page_size=8,
+                                            alloc="striped",
+                                            kv_quant="int8"))
     q_nl, q_cache = prefill(params, q_cache, tokens, lens, cfg)
     preds = [jnp.argmax(q_nl, -1)]
     for t in range(steps):

@@ -9,6 +9,12 @@ lengths, mixed generation budgets — served two ways:
   * **continuous-int8kv** — the same scheduler over an int8 page pool
     (``kv_quant="int8"``): identical admission/steps, smaller pages —
     the ``page_bytes`` column shows the per-page HBM cost side by side.
+  * **continuous-mesh{N}** (``--mesh N``, N > 1) — the same scheduler
+    with ``CacheConfig(mesh=make_serving_mesh(N))``: the page pool is
+    partitioned over the ``model`` axis, the allocator runs per-shard
+    free lists, and every decode tick goes through the shard_map'd
+    partitioned attention.  On CPU, simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
   * **static** — the PR-4 loop as a baseline: group requests into
     batches of ``slots`` in arrival order, run ``prefill`` →
     ``greedy_decode`` to the *longest* budget in the batch, only then
@@ -17,12 +23,13 @@ lengths, mixed generation budgets — served two ways:
 
 Reported per row: generated tokens/s (host wall time — ordering-only on
 CPU, see benchmarks/common.py), decode steps taken, and page-pool
-occupancy (peak / mean over ticks vs the pool size).  The occupancy
-columns are exact regardless of host timing: they count pages through
-the allocator, the serving analogue of the flash engine's
-blocks-touched counters.
+occupancy (peak / mean over ticks vs the pool size; sharded rows add
+``shard_peaks``, the per-shard page peaks — the fullest shard is what
+admission actually gates on).  The occupancy columns are exact
+regardless of host timing: they count pages through the allocator, the
+serving analogue of the flash engine's blocks-touched counters.
 
-Run: ``python -m benchmarks.serving [--smoke] [--json PATH]``.
+Run: ``python -m benchmarks.serving [--smoke] [--json PATH] [--mesh N]``.
 """
 from __future__ import annotations
 
@@ -37,7 +44,7 @@ from repro.configs import get_smoke_config
 from repro.core.tiling import ceil_div
 from repro.kernels.tiled_matmul.ops import kernel_mode
 from repro.models.transformer import init_model
-from repro.serving.cache import init_cache, page_nbytes
+from repro.serving.cache import CacheConfig, init_cache, page_nbytes
 from repro.serving.engine import greedy_decode, prefill
 from repro.serving.scheduler import Scheduler
 
@@ -70,10 +77,11 @@ def _trace(rng, n_requests, max_len):
 
 
 def _run_continuous(params, cfg, reqs, *, slots, pool, page, max_len,
-                    kv_quant="none"):
-    sched = Scheduler(params, cfg, slots=slots, max_len=max_len,
-                      page_size=page, pool_pages=pool, bucket=8,
-                      kv_quant=kv_quant)
+                    kv_quant="none", mesh=None):
+    sched = Scheduler(params, cfg, slots=slots, max_len=max_len, bucket=8,
+                      config=CacheConfig(layout="paged", alloc="dynamic",
+                                         page_size=page, pool_pages=pool,
+                                         kv_quant=kv_quant, mesh=mesh))
     pending = sorted(reqs, key=lambda r: r[0])
     t0 = time.perf_counter()
     tick = 0
@@ -86,9 +94,11 @@ def _run_continuous(params, cfg, reqs, *, slots, pool, page, max_len,
     sec = time.perf_counter() - t0
     n_tokens = sum(len(v) for v in sched.finished.values())
     occ = np.asarray(sched.occupancy_log)
+    shard_occ = np.asarray(sched.shard_occupancy_log)   # (ticks, S)
     return {"wall_s": sec, "tokens": n_tokens, "steps": tick,
             "pages_peak": int(occ.max()), "pages_mean": float(occ.mean()),
-            "pool": sched.pool_occupancy()[1],
+            "pool": sched.pool_occupancy().total,
+            "shard_peaks": [int(p) for p in shard_occ.max(axis=0)],
             "page_bytes": page_nbytes(sched.cache)}
 
 
@@ -110,7 +120,8 @@ def _run_static(params, cfg, reqs, *, slots, page, max_len):
         lens = jnp.asarray([len(p) for _, p, _ in batch], jnp.int32)
         budgets = [n for _, _, n in batch]
         cache = init_cache(cfg, b, max_len=max_len, dtype=jnp.float32,
-                           layout="paged", page_size=page)
+                           config=CacheConfig(layout="paged",
+                                              page_size=page))
         pb = page_nbytes(cache)
         nl, cache = prefill(params, cache, jnp.asarray(prompts), lens, cfg)
         first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
@@ -126,23 +137,32 @@ def _run_static(params, cfg, reqs, *, slots, page, max_len):
     occ = np.asarray(occ)
     return {"wall_s": sec, "tokens": n_tokens, "steps": steps,
             "pages_peak": int(occ.max()), "pages_mean": float(occ.mean()),
-            "pool": len(reqs[:slots]) * max_pages, "page_bytes": pb}
+            "pool": len(reqs[:slots]) * max_pages, "shard_peaks": None,
+            "page_bytes": pb}
 
 
-def bench_one(name, arch, slots, pool, page, max_len, n_requests, seed):
+def bench_one(name, arch, slots, pool, page, max_len, n_requests, seed,
+              mesh_size=1):
     cfg = get_smoke_config(arch).replace(quant_proj="none", dtype="float32")
     params = init_model(jax.random.PRNGKey(0), cfg)
     reqs = _trace(np.random.default_rng(seed), n_requests, max_len)
+    runs = [
+        ("continuous", _run_continuous(params, cfg, reqs, slots=slots,
+                                       pool=pool, page=page,
+                                       max_len=max_len)),
+        ("continuous-int8kv", _run_continuous(
+            params, cfg, reqs, slots=slots, pool=pool, page=page,
+            max_len=max_len, kv_quant="int8")),
+    ]
+    if mesh_size > 1:
+        from repro.launch.mesh import make_serving_mesh
+        runs.append((f"continuous-mesh{mesh_size}", _run_continuous(
+            params, cfg, reqs, slots=slots, pool=pool, page=page,
+            max_len=max_len, mesh=make_serving_mesh(mesh_size))))
+    runs.append(("static", _run_static(params, cfg, reqs, slots=slots,
+                                       page=page, max_len=max_len)))
     rows = []
-    for scheme, res in (
-            ("continuous", _run_continuous(params, cfg, reqs, slots=slots,
-                                           pool=pool, page=page,
-                                           max_len=max_len)),
-            ("continuous-int8kv", _run_continuous(
-                params, cfg, reqs, slots=slots, pool=pool, page=page,
-                max_len=max_len, kv_quant="int8")),
-            ("static", _run_static(params, cfg, reqs, slots=slots,
-                                   page=page, max_len=max_len))):
+    for scheme, res in runs:
         rows.append({
             "shape": name, "scheme": scheme, "slots": slots, "page": page,
             "requests": n_requests, "mode": kernel_mode(),
@@ -152,16 +172,21 @@ def bench_one(name, arch, slots, pool, page, max_len, n_requests, seed):
             "pages_mean": round(res["pages_mean"], 1),
             "pool_pages": res["pool"],
             "occupancy_frac": round(res["pages_mean"] / res["pool"], 3),
+            "shard_peaks": res["shard_peaks"],
             "page_bytes": res["page_bytes"],
         })
     return rows
 
 
 def main(argv=None) -> None:
-    args = bench_options(argv, description=__doc__)
+    args = bench_options(argv, description=__doc__, extra=lambda p:
+                         p.add_argument(
+                             "--mesh", type=int, default=1, metavar="N",
+                             help="add a continuous-meshN row served over "
+                                  "an N-device model-axis mesh"))
     rows = []
     for spec in (SMOKE_SHAPES if args.smoke else SMOKE_SHAPES + SHAPES):
-        rows.extend(bench_one(*spec))
+        rows.extend(bench_one(*spec, mesh_size=args.mesh))
     print_table("continuous vs static batching (mixed-arrival trace)", rows)
     if args.json:
         write_json(args.json, {"serving": rows})

@@ -1,7 +1,8 @@
 """Continuously-batched int8 serving on the paged-KV engine.
 
     PYTHONPATH=src python examples/serve_quantized.py --requests 6 \
-        [--slots 3] [--pool-pages 40] [--page-size 8] [--no-share]
+        [--slots 3] [--pool-pages 40] [--page-size 8] [--no-share] \
+        [--mesh N]
 
 The paper's deployment story, serving-shaped: offline weight
 quantization → dynamic activation quantization per step → int8 GEMMs for
@@ -14,6 +15,11 @@ recomputing them), steps the whole live batch through one jitted decode
 body per tick, and retires finished sequences so their pages are
 visibly recycled — watch the ``pool`` column fall as sequences finish
 and rise as the queue drains into the freed pages (docs/DESIGN.md §4).
+
+``--mesh N`` serves the same loop over an N-device ``("model",)`` mesh
+(``CacheConfig(mesh=...)``): partitioned page pool, per-shard free
+lists, shard_map'd decode.  On CPU, simulate devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 import argparse
 import time
@@ -24,6 +30,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core.quantize_params import quantize_model_params
 from repro.models.transformer import init_model
+from repro.serving.cache import CacheConfig
 from repro.serving.scheduler import Scheduler
 
 
@@ -41,14 +48,23 @@ def main():
                          "smaller values exercise admission control)")
     ap.add_argument("--no-share", action="store_true",
                     help="disable prefix-sharing admissions")
+    ap.add_argument("--mesh", type=int, default=1, metavar="N",
+                    help="serve over an N-device model-axis mesh")
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh)
     cfg = get_smoke_config(args.arch).replace(quant_proj="w8a8")
     params = quantize_model_params(
         init_model(jax.random.PRNGKey(0), cfg.replace(quant_proj="none")))
     sched = Scheduler(params, cfg, slots=args.slots, max_len=args.max_len,
-                      page_size=args.page_size, pool_pages=args.pool_pages,
-                      share_prefix=not args.no_share, bucket=8)
+                      share_prefix=not args.no_share, bucket=8,
+                      config=CacheConfig(layout="paged", alloc="dynamic",
+                                         page_size=args.page_size,
+                                         pool_pages=args.pool_pages,
+                                         mesh=mesh))
 
     # mixed-length prompts; every third one reuses a long prefix of the
     # first (those admissions fork its pages instead of recomputing)
@@ -66,8 +82,11 @@ def main():
         trace.append((arrival, prompt.astype(np.int32),
                       max(2, args.tokens - i)))
 
+    occ0 = sched.pool_occupancy()
+    shards = (f" x{len(occ0.per_shard)} shards"
+              if len(occ0.per_shard) > 1 else "")
     print(f"arch={cfg.name} slots={args.slots} page={args.page_size} "
-          f"pool={sched.pool_occupancy()[1]} pages "
+          f"pool={occ0.total} pages{shards} "
           f"share_prefix={not args.no_share}")
     print(f"{'tick':>4} {'arrive':>6} {'live':>4} {'queue':>5} "
           f"{'pool':>9} {'finished this tick'}")
@@ -79,9 +98,9 @@ def main():
             _, prompt, budget = pending.pop(0)
             arrived.append(sched.submit(prompt, budget))
         done = sched.step()
-        used, total = sched.pool_occupancy()
+        occ = sched.pool_occupancy()
         print(f"{tick:>4} {str(arrived or ''):>6} {sched.n_active:>4} "
-              f"{len(sched.queue):>5} {used:>4}/{total:<4} "
+              f"{len(sched.queue):>5} {occ.used:>4}/{occ.total:<4} "
               f"{done or ''}")
         tick += 1
     sec = time.perf_counter() - t0
@@ -90,7 +109,7 @@ def main():
     print(f"\n{len(sched.finished)} requests, {n_tokens} tokens in "
           f"{sec:.2f}s ({n_tokens / sec:.1f} tok/s host-CPU), "
           f"peak pool occupancy "
-          f"{max(sched.occupancy_log)}/{sched.pool_occupancy()[1]}")
+          f"{max(sched.occupancy_log)}/{sched.pool_occupancy().total}")
     for rid in sorted(sched.finished)[:3]:
         print(f"request {rid}: {sched.finished[rid].tolist()}")
 

@@ -1,26 +1,51 @@
-"""Production mesh construction (single-pod 16×16, multi-pod 2×16×16).
+"""Mesh construction: production (16×16 / 2×16×16), host, and serving.
 
-A FUNCTION, not a module-level constant — importing this module never
-touches jax device state (the dry-run sets the host-device count before any
-jax initialization; see dryrun.py).
+FUNCTIONS, not module-level constants — importing this module never
+touches jax device state (the dry-run sets the host-device count before
+any jax initialization; see dryrun.py).
+
+``axis_types`` only exists on newer jax; ``_make_mesh`` falls back to the
+plain spelling so these helpers work on every supported version (the
+serving stack's shard_map collectives are indifferent to axis types).
 """
 from __future__ import annotations
 
 import jax
 
 
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int | None = None, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     data = data or (n // model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(model: int):
+    """Single-axis ``("model",)`` mesh over the first ``model`` devices —
+    the shape the serving stack expects (``CacheConfig(mesh=...)``): the
+    paged pool, the per-shard allocator, and the shard_map'd decode all
+    partition over exactly this axis.  On CPU, simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax import)."""
+    import numpy as np
+    devs = jax.devices()
+    if model > len(devs):
+        raise ValueError(
+            f"serving mesh needs {model} devices; only {len(devs)} "
+            "available (on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return jax.sharding.Mesh(np.asarray(devs[:model]), ("model",))

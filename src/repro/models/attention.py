@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.quantized_linear import apply_linear, init_linear
 from repro.core.qkv_fusion import apply_fused_qkv
-from repro.launch.sharding import model_axis_size, shard
+from repro.launch.sharding import active_mesh, model_axis_size, shard
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_norm, apply_rope, init_norm, softcap
 
@@ -199,12 +199,52 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
     rows per block — no length ever falls back to the dense gather.
     ``attn_impl="jnp"`` (or no Pallas) gathers the pages into a dense
     cache and reuses the jnp decode path (the parity oracle).
+
+    Inside a sharding context with a >1 ``model`` axis the whole step —
+    scatter *and* attend — runs under ``shard_map`` instead (the
+    partitioned decode path, ``docs/DESIGN.md`` §3): KV heads partition
+    over ``model`` when divisible (tensor parallel — each shard walks the
+    full page table for its own heads; no softmax collective), otherwise
+    the page-pool dim partitions and each shard walks only the pages it
+    owns, combining via a cross-shard partial softmax
+    (``_paged_attend_split``).  GSPMD never sees the pool indexed by the
+    table, so it can never decide to all-gather it.
     """
     quant = len(cache) == 4
     ck, cv = cache[0], cache[1]
     page = ck.shape[1]
     tok_pos = cache_pos[:, None] + jnp.arange(s)[None, :]       # (B, S)
     pidx = jnp.take_along_axis(page_table, tok_pos // page, axis=1)
+
+    mesh = active_mesh()
+    msize = model_axis_size() or 1
+    if mesh is not None and msize > 1:
+        by = "heads" if cfg.n_kv_heads % msize == 0 else "pages"
+        if by == "pages" and ck.shape[0] % msize:
+            raise ValueError(
+                f"paged pool of {ck.shape[0]} pages cannot split over a "
+                f"{msize}-way model axis; size the pool to a multiple "
+                "(CacheConfig rounds pool_pages up automatically)")
+        if quant:
+            from repro.core.quantization import quantize_kv
+            kq, k_sc = quantize_kv(k)
+            vq, v_sc = quantize_kv(v)
+            upds = (kq, vq, k_sc, v_sc)
+        else:
+            upds = (k, v)
+        pools = _paged_scatter_sharded(mesh, by, tuple(cache), upds,
+                                       pidx, tok_pos % page)
+        if by == "heads":
+            o = _paged_attend_tp(q, tok_pos, page_table, cache_pos + s,
+                                 pools, cfg, scale=scale,
+                                 is_local=is_local, b=b, s=s, mesh=mesh)
+        else:
+            o = _paged_attend_split(q, tok_pos, page_table, pools, cfg,
+                                    scale=scale, is_local=is_local,
+                                    b=b, s=s, mesh=mesh)
+        o = o.reshape(b, s, cfg.q_dim)
+        y = apply_linear(params["wo"], o, mode=cfg.quant_proj)
+        return y, pools
     if quant:
         from repro.core.quantization import quantize_kv
         cks, cvs = cache[2], cache[3]
@@ -252,6 +292,185 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
     y = apply_linear(params["wo"], o, mode=cfg.quant_proj)
     new_cache = (ck, cv, cks, cvs) if quant else (ck, cv)
     return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Partitioned paged decode (docs/DESIGN.md §3).  Everything that touches
+# the page pool runs under shard_map: each device holds only its pool
+# shard and the program below IS the per-shard program — the pool is
+# never an operand of a GSPMD-partitioned gather/scatter, so no sharding
+# propagation choice can materialize (all-gather) it.
+# ---------------------------------------------------------------------------
+def _pool_specs(quant: bool, by: str) -> tuple:
+    """shard_map PartitionSpecs for (k_pages, v_pages[, k_scales,
+    v_scales]): KV-head dim over ``model`` (``by="heads"``) or page-pool
+    dim over ``model`` (``by="pages"``).  The same specs fit the step's
+    new-KV updates on the heads path — their head dim sits at the same
+    index as the pool's."""
+    from jax.sharding import PartitionSpec as P
+    if by == "heads":
+        val, sc = P(None, None, "model", None), P(None, None, "model")
+    else:
+        val, sc = P("model", None, None, None), P("model", None, None)
+    return (val, val, sc, sc) if quant else (val, val)
+
+
+def _paged_scatter_sharded(mesh, by: str, pools: tuple, upds: tuple,
+                           pidx: jax.Array, slot: jax.Array) -> tuple:
+    """Scatter the step's new KV rows (+scale rows) into the partitioned
+    pools.  ``by="heads"``: every shard owns all pages for a head slice —
+    a plain local scatter of its update slice.  ``by="pages"``: indices
+    are global page ids; each shard rebases them into its own slab and
+    drops the writes it does not own (every page is owned by exactly one
+    shard, so collectively the scatter lands exactly once)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    quant = len(pools) == 4
+    pool_specs = _pool_specs(quant, by)
+    upd_specs = (pool_specs if by == "heads"
+                 else tuple(P(*([None] * len(sp)))
+                            for sp in pool_specs))
+
+    def scat(pidx, slot, *ops):
+        ps, us = ops[:len(pools)], ops[len(pools):]
+        if by == "heads":
+            return tuple(p.at[pidx, slot].set(u.astype(p.dtype))
+                         for p, u in zip(ps, us))
+        s_idx = jax.lax.axis_index("model")
+        per = ps[0].shape[0]
+        loc = pidx - s_idx * per
+        tgt = jnp.where((loc >= 0) & (loc < per), loc, per)
+        return tuple(p.at[tgt, slot].set(u.astype(p.dtype), mode="drop")
+                     for p, u in zip(ps, us))
+
+    rep2 = P(None, None)
+    return shard_map(scat, mesh=mesh,
+                     in_specs=(rep2, rep2, *pool_specs, *upd_specs),
+                     out_specs=pool_specs, check_rep=False)(
+        pidx, slot, *pools, *upds)
+
+
+def _paged_attend_tp(q, tok_pos, page_table, lengths, pools,
+                     cfg: ModelConfig, *, scale, is_local, b, s, mesh):
+    """Tensor-parallel paged attention: KV heads partition over ``model``
+    (with their g-sized query groups riding along, so the q head dim
+    partitions identically).  Each shard runs the *full* schedule —
+    kernel page walk or gather oracle — over its head slice and the
+    complete page table; softmax is per-head, so no combine is needed and
+    per-head math is identical to the unsharded path.  This is the
+    ``(B·KVH, q_blocks, steps)`` kernel grid partitioned over its KVH
+    factor."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    quant = len(pools) == 4
+    pool_specs = _pool_specs(quant, "heads")
+    qspec = P(None, None, "model", None)
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_heads // kh
+
+    if _flash_engine_live(cfg):
+        from repro.kernels.flash_attention.ops import paged_decode_attention
+        q_chunk = None if s <= PAGED_FLASH_MAX_Q else PAGED_PREFILL_CHUNK_Q
+
+        def _pdec(window):
+            def local(q_l, pt, lens, *pl):
+                cks_l, cvs_l = (pl[2], pl[3]) if quant else (None, None)
+                return paged_decode_attention(
+                    q_l, pl[0], pl[1], pt, lens, scale=scale,
+                    window=window, softcap=cfg.attn_logit_softcap,
+                    q_chunk=q_chunk, k_scales=cks_l, v_scales=cvs_l)
+
+            return shard_map(
+                local, mesh=mesh,
+                in_specs=(qspec, P(None, None), P(None), *pool_specs),
+                out_specs=qspec, check_rep=False)(
+                q, page_table, lengths, *pools)
+
+        return _run_windowed(_pdec, cfg, is_local)
+
+    def local(q_l, tokp, pt, loc_flag, *pl):
+        from repro.kernels.flash_attention.ref import (
+            dequantize_gathered, paged_gather, paged_gather_scales)
+        kh_l = pl[0].shape[2]
+        kd = paged_gather(pl[0], pt)
+        vd = paged_gather(pl[1], pt)
+        if quant:
+            kd = dequantize_gathered(kd, paged_gather_scales(pl[2], pt))
+            vd = dequantize_gathered(vd, paged_gather_scales(pl[3], pt))
+        o = _attend_dense(q_l.reshape(b, s, kh_l, g, hd), kd, vd, tokp,
+                          jnp.arange(kd.shape[1]), scale=scale,
+                          cap=cfg.attn_logit_softcap, causal=True,
+                          window=cfg.sliding_window, is_local=loc_flag)
+        return o.reshape(b, s, kh_l * g, hd)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(qspec, P(None, None), P(None, None), P(), *pool_specs),
+        out_specs=qspec, check_rep=False)(
+        q, tok_pos, page_table, jnp.asarray(is_local, bool), *pools)
+
+
+def _paged_attend_split(q, tok_pos, page_table, pools, cfg: ModelConfig,
+                        *, scale, is_local, b, s, mesh):
+    """Split-KV paged attention: the page-pool dim partitions over
+    ``model`` (KV heads don't divide it).  Each shard walks only the
+    table entries that name pages in its own slab — remote pages gather
+    from slot 0 and are masked to NEG_INF, so the walk is shard-local by
+    masking, with no index ever reaching outside the local slab.  The
+    per-shard partial softmaxes combine exactly: a global row max via
+    ``pmax``, then ``psum`` of the weights' normalizer and the weighted-V
+    accumulator (flash-attention's two-pass identity across devices; q is
+    replicated, so only (B,H,S)-sized partials cross the wire — never
+    KV).  Runs the gather-oracle math locally whatever the kernel mode —
+    a partial-output kernel epilogue is the remaining TPU work."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    quant = len(pools) == 4
+    pool_specs = _pool_specs(quant, "pages")
+    page = pools[0].shape[1]
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_heads // kh
+
+    def local(q_, tokp, pt, loc_flag, *pl):
+        from repro.kernels.flash_attention.ref import (
+            dequantize_gathered, paged_gather, paged_gather_scales)
+        s_idx = jax.lax.axis_index("model")
+        per = pl[0].shape[0]
+        loc = pt - s_idx * per                   # rebase to local slab
+        owned = (loc >= 0) & (loc < per)         # (B, max_pages)
+        locc = jnp.where(owned, loc, 0)
+        kd = paged_gather(pl[0], locc)           # (B, T, kh, hd)
+        vd = paged_gather(pl[1], locc)
+        if quant:
+            kd = dequantize_gathered(kd, paged_gather_scales(pl[2], locc))
+            vd = dequantize_gathered(vd, paged_gather_scales(pl[3], locc))
+        t_len = kd.shape[1]
+        own_tok = jnp.repeat(owned, page, axis=1)            # (B, T)
+        sc = jnp.einsum("bskgh,btkh->bkgst", q_.reshape(b, s, kh, g, hd),
+                        kd, preferred_element_type=jnp.float32) * scale
+        sc = softcap(sc, cfg.attn_logit_softcap)
+        sc = sc + _mask_bias(tokp[:, None, None, :], jnp.arange(t_len),
+                             causal=True, window=cfg.sliding_window,
+                             is_local=loc_flag)
+        sc = jnp.where(own_tok[:, None, None, None, :], sc, NEG_INF)
+        # partial softmax against the *global* row max (finite: the
+        # causal diagonal was just written to a page some shard owns)
+        m = jax.lax.pmax(jnp.max(sc, axis=-1), "model")      # (b,k,g,s)
+        p = jnp.where(own_tok[:, None, None, None, :],
+                      jnp.exp(sc - m[..., None]), 0.0)
+        l = jax.lax.psum(jnp.sum(p, axis=-1), "model")
+        acc = jax.lax.psum(
+            jnp.einsum("bkgst,btkh->bkgsh", p, vd.astype(jnp.float32)),
+            "model")
+        o = (acc / jnp.maximum(l, 1e-37)[..., None]).astype(q_.dtype)
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, s, kh * g, hd)
+
+    rep4 = P(None, None, None, None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(rep4, P(None, None), P(None, None), P(), *pool_specs),
+        out_specs=rep4, check_rep=False)(
+        q, tok_pos, page_table, jnp.asarray(is_local, bool), *pools)
 
 
 def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,

@@ -15,22 +15,46 @@ it, so they compose with jit and the state rides inside the cache pytree
 (donated into the serving loop like everything else).  The cache-level
 helpers (``admit_sequence`` / ``free_sequence`` / ``fork_sequence``) are
 the scheduler's host-side admission path — they branch on the returned
-``ok`` eagerly:
+``ok`` eagerly.
 
-  free stack   (P,) int32   ``free[:top]`` are the ids of free pages
-  top          ()   int32   number of free pages (stack pointer)
-  refcounts    (P,) int32   live references per page (0 = free)
+**Shard-local state** — the pool may be partitioned ``shards`` ways over
+a device mesh (``docs/DESIGN.md`` §3: the pool's page dim takes the
+``model`` axis when KV heads do not divide it).  Shard ``s`` owns the
+contiguous global page range ``[s·P/S, (s+1)·P/S)`` and keeps its *own*
+free stack, stack pointer, and refcount row, so allocator state shards
+exactly like the pool it manages (nothing global to replicate but the
+per-sequence ``held`` counts):
 
-Embedded in a ``layout="paged"`` cache (``init_cache(...,
-alloc="dynamic")``) the arrays appear as ``alloc_free`` / ``alloc_top``
-/ ``alloc_ref`` plus ``alloc_held`` (B,) int32 — how many leading
-``page_table`` entries each row actually references (owned or shared).
+  free stack   (S, P/S) int32  ``free[s, :top[s]]`` are free *global* ids
+                               owned by shard ``s``
+  top          (S,)     int32  free pages per shard (stack pointers)
+  refcounts    (S, P/S) int32  live references; global page ``p`` lives
+                               at ``(p // (P/S), p % (P/S))`` (0 = free)
 
-**Reserved scratch page** — page id 0 is never allocated (its refcount
-is pinned at init).  Idle batch slots and the unallocated tail of every
-table row point at it, so their masked writes land somewhere harmless
-without violating validity (invariant 1): the scratch page is never
-named by a live sequence's walked range.
+Allocation stripes a request's pages **round-robin** across shards (page
+``j`` of a request comes from shard ``j mod S``), keeping shards
+balanced, and admission is taken on the **global minimum** of free
+pages: a request is admitted iff *every* shard can cover its share —
+one ``min`` over the ``(S,)`` stack pointers (the psum-min when the
+state is mesh-sharded), no host round-trip, and deliberately
+conservative: a pool whose *total* free count covers the request is
+still refused when one shard is too loaded, because the pages must
+physically come from somewhere.  ``shards=1`` reduces every operation to
+the flat PR-5 free list bit for bit.
+
+Embedded in a ``layout="paged"`` cache (``CacheConfig(alloc="dynamic")``)
+the arrays appear as ``alloc_free`` / ``alloc_top`` / ``alloc_ref`` plus
+``alloc_held`` (B,) int32 — how many leading ``page_table`` entries each
+row actually references (owned or shared).
+
+**Reserved scratch page** — global page id 0 (shard 0's first page) is
+never allocated (its refcount is pinned at init).  Idle batch slots and
+the unallocated tail of every table row point at it, so their masked
+writes land somewhere harmless without violating validity (invariant 1):
+the scratch page is never named by a live sequence's walked range.  The
+reservation makes shard 0 one page smaller than the rest — a permanent,
+deliberate imbalance that keeps the global-min admission rule honest in
+tests.
 
 **Prefix sharing (refcount + boundary CoW)** — ``fork_sequence`` builds
 a child row whose first ``prefix_len // page_size`` entries alias the
@@ -43,8 +67,8 @@ refcount 1 — the *disjoint writable sets* invariant (``docs/DESIGN.md``
 §2, which this module relaxes from full disjointness).
 
 ``free_sequence`` decrements refcounts along the row and pushes only the
-pages that drop to zero back on the stack, so shared prefixes survive
-until their last referencing sequence retires.
+pages that drop to zero back on their owning shard's stack, so shared
+prefixes survive until their last referencing sequence retires.
 """
 from __future__ import annotations
 
@@ -56,10 +80,10 @@ __all__ = ["ALLOC_KEYS", "init_allocator", "can_admit", "alloc_pages",
            "free_pages", "share_pages", "attach_allocator",
            "allocator_state", "store_allocator", "admit_sequence",
            "free_sequence", "fork_sequence", "pool_occupancy",
-           "SCRATCH_PAGE"]
+           "shard_occupancy", "SCRATCH_PAGE"]
 
 SCRATCH_PAGE = 0          # reserved sink page, never allocated
-_RESERVED = 1             # pages [0, _RESERVED) are pinned at init
+_RESERVED = 1             # global pages [0, _RESERVED) are pinned at init
 
 ALLOC_KEYS = ("alloc_free", "alloc_top", "alloc_ref", "alloc_held")
 
@@ -67,81 +91,122 @@ ALLOC_KEYS = ("alloc_free", "alloc_top", "alloc_ref", "alloc_held")
 # ---------------------------------------------------------------------------
 # Core free-list operations (pure array-state functions, jit-compatible)
 # ---------------------------------------------------------------------------
-def init_allocator(n_pages: int) -> dict:
-    """Fresh allocator over a pool of ``n_pages`` physical pages.
+def init_allocator(n_pages: int, shards: int = 1) -> dict:
+    """Fresh allocator over a pool of ``n_pages`` physical pages split
+    into ``shards`` shard-local free lists.
 
-    Pages ``[_RESERVED, n_pages)`` start on the free stack (top of stack
-    = highest id, so early allocations land at the pool's far end —
-    deliberately nothing like the contiguous layout, keeping the
-    indirection honest); page 0 is the pinned scratch page.
+    Per shard, free pages are stacked ascending (top of stack = highest
+    id, so early allocations land at each shard's far end — deliberately
+    nothing like the contiguous layout, keeping the indirection honest);
+    global page 0 is the pinned scratch page, so shard 0 starts one page
+    short.  ``shards`` must divide ``n_pages``.
     """
-    assert n_pages > _RESERVED, f"pool of {n_pages} pages is all-reserved"
-    ids = jnp.arange(n_pages, dtype=jnp.int32)
-    return {
-        "free": jnp.where(ids < n_pages - _RESERVED, ids + _RESERVED, 0),
-        "top": jnp.asarray(n_pages - _RESERVED, jnp.int32),
-        "ref": jnp.where(ids < _RESERVED, 1, 0).astype(jnp.int32),
-    }
+    assert n_pages % shards == 0, (n_pages, shards)
+    per = n_pages // shards
+    assert per > _RESERVED, f"shard of {per} pages is all-reserved"
+    ids = jnp.arange(n_pages, dtype=jnp.int32).reshape(shards, per)
+    col = jnp.arange(per, dtype=jnp.int32)[None, :]
+    srow = jnp.arange(shards, dtype=jnp.int32)[:, None]
+    # shard 0 drops the scratch page: [1..per-1, pad]; others keep all
+    free = jnp.where(srow == 0, jnp.where(col < per - 1, ids + 1, 0), ids)
+    top = jnp.where(jnp.arange(shards) == 0, per - _RESERVED,
+                    per).astype(jnp.int32)
+    ref = jnp.zeros((shards, per), jnp.int32).at[0, SCRATCH_PAGE].set(1)
+    return {"free": free, "top": top, "ref": ref}
+
+
+def _shard_need(n, shards: int) -> jnp.ndarray:
+    """(S,) pages shard ``s`` must supply for a round-robin grab of ``n``:
+    ``|{j in [0, n) : j mod S == s}|``."""
+    s = jnp.arange(shards, dtype=jnp.int32)
+    return jnp.maximum(0, (jnp.asarray(n, jnp.int32) - s + shards - 1)
+                       // shards)
 
 
 def can_admit(state: dict, n) -> jnp.ndarray:
-    """bool scalar — are ``n`` free pages available right now?"""
-    return jnp.asarray(n, jnp.int32) <= state["top"]
+    """bool scalar — can every shard cover its round-robin share of ``n``
+    pages right now?  One min over the stack pointers (the global-min
+    admission rule; lowers to a cross-shard min when the state is
+    mesh-sharded)."""
+    shards = state["free"].shape[0]
+    return jnp.min(state["top"] - _shard_need(n, shards)) >= 0
 
 
 def alloc_pages(state: dict, n, width: int):
-    """Pop ``n`` pages into a ``(width,)`` table row (entries past ``n``
-    are scratch).  Returns ``(state, row, ok)``; when ``ok`` is False
-    (fewer than ``n`` pages free) the state is unchanged and the row is
-    all-scratch — admission control is the caller branching on ``ok``.
+    """Pop ``n`` pages — round-robin across shards — into a ``(width,)``
+    table row of global page ids (entries past ``n`` are scratch).
+    Returns ``(state, row, ok)``; when ``ok`` is False (some shard cannot
+    cover its share) the state is unchanged and the row is all-scratch —
+    admission control is the caller branching on ``ok``.
     """
     n = jnp.asarray(n, jnp.int32)
-    n_pool = state["free"].shape[0]
-    ok = can_admit(state, n)
+    shards, per = state["free"].shape
+    n_pool = shards * per
+    need = _shard_need(n, shards)
+    ok = jnp.min(state["top"] - need) >= 0
     j = jnp.arange(width, dtype=jnp.int32)
+    sh = j % shards                         # owning shard of slot j
+    rank = j // shards                      # earlier slots on that shard
     take = (j < n) & ok
-    idx = jnp.clip(state["top"] - 1 - j, 0, n_pool - 1)
-    row = jnp.where(take, state["free"][idx], SCRATCH_PAGE)
-    # scatter-add with dropped out-of-range targets guards the no-op case
-    ref = state["ref"].at[jnp.where(take, row, n_pool)].add(1, mode="drop")
-    top = jnp.where(ok, state["top"] - n, state["top"])
-    return {"free": state["free"], "top": top, "ref": ref}, row, ok
+    idx = jnp.clip(state["top"][sh] - 1 - rank, 0, per - 1)
+    row = jnp.where(take, state["free"][sh, idx], SCRATCH_PAGE)
+    # scatter-add on the flat refcounts (global id == flat index); dropped
+    # out-of-range targets guard the no-op case
+    ref = state["ref"].reshape(-1).at[
+        jnp.where(take, row, n_pool)].add(1, mode="drop")
+    top = jnp.where(ok, state["top"] - need, state["top"])
+    return {"free": state["free"], "top": top,
+            "ref": ref.reshape(shards, per)}, row, ok
 
 
 def free_pages(state: dict, row: jnp.ndarray, count) -> dict:
     """Drop one reference from the first ``count`` entries of ``row``;
-    pages whose refcount reaches zero go back on the free stack."""
+    pages whose refcount reaches zero go back on their owning shard's
+    free stack."""
     count = jnp.asarray(count, jnp.int32)
-    n_pool = state["free"].shape[0]
+    shards, per = state["free"].shape
+    n_pool = shards * per
     width = row.shape[0]
     held = jnp.arange(width, dtype=jnp.int32) < count
-    ref = state["ref"].at[jnp.where(held, row, n_pool)].add(-1, mode="drop")
+    ref = state["ref"].reshape(-1).at[
+        jnp.where(held, row, n_pool)].add(-1, mode="drop")
     released = held & (ref[row] == 0)
-    # pack released ids onto the stack: k-th released page → free[top + k]
-    pos = state["top"] + jnp.cumsum(released.astype(jnp.int32)) - 1
-    free = state["free"].at[jnp.where(released, pos, n_pool)].set(
-        row, mode="drop")
-    top = state["top"] + jnp.sum(released.astype(jnp.int32))
-    return {"free": free, "top": top, "ref": ref}
+    sh = row // per                          # owning shard per entry
+    # pack released ids onto their shard's stack: the k-th released page
+    # of shard s lands at free[s, top[s] + k]
+    belong = (sh[:, None] == jnp.arange(shards, dtype=jnp.int32)[None, :])
+    contrib = (released[:, None] & belong).astype(jnp.int32)   # (w, S)
+    rank = jnp.take_along_axis(jnp.cumsum(contrib, axis=0) - 1,
+                               sh[:, None], axis=1)[:, 0]
+    pos = state["top"][sh] + rank
+    safe = released & (pos < per)
+    free = state["free"].reshape(-1).at[
+        jnp.where(safe, sh * per + pos, n_pool)].set(row, mode="drop")
+    top = state["top"] + jnp.sum(contrib, axis=0)
+    return {"free": free.reshape(shards, per), "top": top,
+            "ref": ref.reshape(shards, per)}
 
 
 def share_pages(state: dict, row: jnp.ndarray, count) -> dict:
     """Add a reference to the first ``count`` entries of ``row`` (a new
     sequence aliasing an existing prefix, read-only from now on)."""
     count = jnp.asarray(count, jnp.int32)
-    n_pool = state["free"].shape[0]
+    shards, per = state["free"].shape
+    n_pool = shards * per
     held = jnp.arange(row.shape[0], dtype=jnp.int32) < count
-    ref = state["ref"].at[jnp.where(held, row, n_pool)].add(1, mode="drop")
-    return {"free": state["free"], "top": state["top"], "ref": ref}
+    ref = state["ref"].reshape(-1).at[
+        jnp.where(held, row, n_pool)].add(1, mode="drop")
+    return {"free": state["free"], "top": state["top"],
+            "ref": ref.reshape(shards, per)}
 
 
 # ---------------------------------------------------------------------------
 # Cache-level glue: the allocator owns page_table / seq_lens
 # ---------------------------------------------------------------------------
-def attach_allocator(cache: dict, n_pages: int) -> dict:
+def attach_allocator(cache: dict, n_pages: int, shards: int = 1) -> dict:
     """Embed fresh allocator state into a paged cache dict (one donatable
-    pytree; called by ``init_cache(..., alloc="dynamic")``)."""
-    state = init_allocator(n_pages)
+    pytree; called by ``init_cache`` for ``alloc="dynamic"``)."""
+    state = init_allocator(n_pages, shards)
     batch = cache["page_table"].shape[0]
     cache["alloc_free"] = state["free"]
     cache["alloc_top"] = state["top"]
@@ -167,9 +232,22 @@ def _page_size(cache: dict) -> int:
 
 
 def pool_occupancy(cache: dict) -> tuple[int, int]:
-    """(pages in use, pool size) — reserved scratch pages count as used."""
-    n = int(cache["alloc_free"].shape[0])
-    return n - int(cache["alloc_top"]), n
+    """(pages in use, pool size) globally — reserved scratch pages count
+    as used.  Per-shard truth (which is what admission actually gates on)
+    is ``shard_occupancy``."""
+    shards, per = cache["alloc_free"].shape
+    n = shards * per
+    return n - int(jnp.sum(cache["alloc_top"])), n
+
+
+def shard_occupancy(cache: dict) -> tuple[tuple[int, int], ...]:
+    """((pages in use, shard size), …) per pool shard.  Under imbalance
+    the global ``pool_occupancy`` number overstates headroom — a request
+    is admitted only when *every* shard covers its round-robin share, so
+    the binding constraint is the fullest shard reported here."""
+    shards, per = cache["alloc_free"].shape
+    tops = [int(t) for t in cache["alloc_top"]]
+    return tuple((per - t, per) for t in tops)
 
 
 def admit_sequence(cache: dict, slot: int, n_tokens: int):

@@ -1,4 +1,4 @@
-"""Decode-state (KV / SSM) cache: construction + sharding specs.
+"""Decode-state (KV / SSM) cache: construction, ``CacheConfig``, sharding.
 
 Two attention-cache layouts behind one ``init_cache`` API (see
 ``docs/DESIGN.md`` §1–2 for the full serving architecture):
@@ -21,8 +21,8 @@ tables (attention families only; the SSM state is already O(1)):
   page_table       (B, max_pages) int32 — physical page id of logical page
                    j of sequence b; rows' *writable* page sets are disjoint
   seq_lens         (B,) int32 — tokens currently committed per sequence
-  alloc_*          (``alloc="dynamic"`` only) free-list allocator state —
-                   see ``serving/allocator.py``
+  alloc_*          (``alloc="dynamic"`` only) shard-local free-list
+                   allocator state — see ``serving/allocator.py``
 
 Page-table invariants (``docs/DESIGN.md`` §2): entries are valid pool
 indices; distinct sequences never *write* the same physical page (a
@@ -33,17 +33,34 @@ the first ``seq_lens[b]`` positions hold committed data (later slots may
 hold prefill-padding garbage that decode masks until it overwrites
 them).
 
-Sharding policy (``docs/DESIGN.md`` §3): batch over the DP axes; KV heads
-over ``model`` when divisible, otherwise the **sequence** dim of the dense
-cache — or the **page-pool** dim of the paged cache — goes to ``model``
-(split-KV decoding — GSPMD inserts the partial-softmax all-reduces).
-``cache_logical_axes`` encodes that choice per array.
+All construction knobs live in the frozen ``CacheConfig`` dataclass —
+layout/page/allocator choices plus the mesh and KV-sharding policy.  The
+pre-PR-7 keyword sprawl (``init_cache(layout=, page_size=, alloc=,
+pool_pages=, kv_quant=)``) survives as a thin shim that builds the same
+``CacheConfig`` and emits a ``DeprecationWarning``.
+
+Sharding (``docs/DESIGN.md`` §3): under ``CacheConfig(mesh=...)`` the
+cache comes back already partitioned (``jax.device_put`` with
+``NamedSharding`` per leaf).  KV heads go to ``model`` when they divide
+its extent (tensor-parallel decode); otherwise the paged pool's **page
+dim** (or the dense cache's sequence dim) takes ``model`` — split-KV
+decoding with shard-local page walks and a partial-softmax combine
+(``models/attention.py``).  The allocator state shards exactly like the
+pool it manages.  ``cache_logical_axes`` encodes the per-array choice;
+``cache_shardings`` resolves it to ``NamedSharding``s.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
+from typing import Any
+
+import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 
 from repro.core.tiling import ceil_div
+from repro.launch.sharding import DEFAULT_LOGICAL_RULES, tree_specs
 from repro.models.config import ModelConfig
 
 DEFAULT_PAGE_SIZE = 64
@@ -52,6 +69,91 @@ DEFAULT_PAGE_SIZE = 64
 # scatters physical pages must treat these together (scale rows travel
 # with their int8 pages — docs/DESIGN.md §2)
 PAGE_STATE_KEYS = ("k_pages", "v_pages", "k_scales", "v_scales")
+
+# Serving restricts the paged pool's page dim to the `model` axis (the
+# generic kv_pages chain also offers `data`/`pod`): the shard-local
+# allocator and the shard_map'd split-KV decode both need ONE known axis
+# to size their shards and run their collectives over.
+SERVING_RULES: dict[str, tuple] = dict(DEFAULT_LOGICAL_RULES,
+                                       kv_pages=("model",))
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Every knob of decode-cache construction in one frozen value.
+
+    Layout knobs (pre-PR-7 ``init_cache`` keywords, same semantics):
+      layout:     ``"dense"`` | ``"paged"``.
+      page_size:  tokens per KV page (paged only).
+      alloc:      ``"contiguous"`` / ``"striped"`` static tables, or
+                  ``"dynamic"`` — embedded free-list allocator.
+      pool_pages: physical pool size (paged; default
+                  ``batch * ceil(max_len / page_size)``, rounded up to a
+                  multiple of the pool shard count).
+      kv_quant:   ``"none"`` | ``"int8"`` (int8 pools + f32 scale rows).
+
+    Sharding knobs (new in PR 7):
+      mesh:       a ``jax.sharding.Mesh`` (or None).  When set,
+                  ``init_cache`` returns an already-partitioned pytree
+                  and the serving engine activates the sharding context
+                  (tensor-parallel / split-KV decode) around every
+                  model call.
+      kv_shard:   ``"auto"`` — KV heads to ``model`` when divisible,
+                  else the page-pool (or dense seq) dim; ``"heads"`` /
+                  ``"pages"`` (alias ``"seq"``) force one policy.
+      pool_shards: override the allocator shard count without a mesh
+                  (unit-testing the per-shard free lists); defaults to
+                  the model-axis extent under the pages policy, else 1.
+    """
+    layout: str = "dense"
+    page_size: int = DEFAULT_PAGE_SIZE
+    alloc: str = "contiguous"
+    pool_pages: int | None = None
+    kv_quant: str = "none"
+    mesh: Any = None
+    kv_shard: str = "auto"
+    pool_shards: int | None = None
+
+    def model_size(self) -> int:
+        """Extent of the mesh's ``model`` axis (1 without a mesh)."""
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape.get("model", 1))
+
+    def resolved_kv_shard(self, n_kv_heads: int) -> str | None:
+        """``"heads"`` | ``"pages"`` | None — the KV partitioning the
+        decode path will actually run with (None = unsharded)."""
+        m = self.model_size()
+        if m <= 1:
+            return None
+        if self.kv_shard == "heads":
+            if n_kv_heads % m:
+                raise ValueError(
+                    f"kv_shard='heads' needs n_kv_heads ({n_kv_heads}) "
+                    f"divisible by the model axis ({m})")
+            return "heads"
+        if self.kv_shard in ("seq", "pages"):
+            return "pages"
+        if self.kv_shard != "auto":
+            raise ValueError(f"unknown kv_shard {self.kv_shard!r}")
+        return "heads" if n_kv_heads % m == 0 else "pages"
+
+    def shards(self, n_kv_heads: int) -> int:
+        """Pool/allocator shard count S: the model-axis extent when the
+        page dim is the partitioned one, else 1 (heads-sharded pools
+        replicate the page dim, so the free list stays flat)."""
+        if self.pool_shards is not None:
+            return self.pool_shards
+        if (self.layout == "paged"
+                and self.resolved_kv_shard(n_kv_heads) == "pages"):
+            return self.model_size()
+        return 1
+
+    def logical_axes(self, cfg: ModelConfig) -> dict:
+        return cache_logical_axes(
+            cfg, self.kv_shard, layout=self.layout,
+            dynamic=(self.alloc == "dynamic"), kv_quant=self.kv_quant,
+            model_size=self.model_size() if self.mesh is not None else None)
 
 
 def n_shared_sites(cfg: ModelConfig) -> int:
@@ -75,7 +177,7 @@ def default_page_table(batch: int, max_pages: int,
         are scattered across the pool, exercising true indirection.
 
     The dynamic third option lives in ``serving/allocator.py``
-    (``init_cache(..., alloc="dynamic")``): rows start unallocated and a
+    (``CacheConfig(alloc="dynamic")``): rows start unallocated and a
     free-list allocator assigns/recycles pages at admission/retirement.
     """
     b = jnp.arange(batch, dtype=jnp.int32)[:, None]
@@ -87,12 +189,14 @@ def default_page_table(batch: int, max_pages: int,
     raise ValueError(f"unknown page allocation {alloc!r}")
 
 
+_LEGACY_KEYS = ("layout", "page_size", "alloc", "pool_pages", "kv_quant")
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16, *, layout: str = "dense",
-               page_size: int = DEFAULT_PAGE_SIZE,
-               alloc: str = "contiguous",
-               pool_pages: int | None = None,
-               kv_quant: str = "none") -> dict:
+               dtype=jnp.bfloat16, config: CacheConfig | None = None, *,
+               layout: str | None = None, page_size: int | None = None,
+               alloc: str | None = None, pool_pages: int | None = None,
+               kv_quant: str | None = None) -> dict:
     """Zero-initialised decode cache for ``batch`` sequences of up to
     ``max_len`` tokens.
 
@@ -104,47 +208,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         ``ssm_h`` and the ``conv_*`` tails — stays f32: the recurrence
         and the decode-time conv window accumulate across steps, so
         their state dtype is an accuracy contract, not a serving knob).
-      layout: ``"dense"`` (seed rectangular buffers) or ``"paged"``
-        (fixed-size KV pages + per-sequence page tables; attention
-        families only).
-      page_size: tokens per KV page (paged layout only).
-      alloc: initial physical page placement — ``"contiguous"`` /
-        ``"striped"`` build-time static tables (``default_page_table``),
-        or ``"dynamic"``: rows start unallocated (all-scratch tables,
-        ``seq_lens = 0``) and the embedded free-list allocator
-        (``serving/allocator.py``, state keys ``alloc_*``) assigns pages
-        at admission and recycles them at retirement.
-      pool_pages: physical pool size (paged only; default
-        ``batch * ceil(max_len / page_size)``).  With ``alloc="dynamic"``
-        the pool may be smaller than the worst-case rectangle — prefix
-        sharing and admission control are what make that safe.
-      kv_quant: ``"none"`` (pages stored in ``dtype``) or ``"int8"``
-        (paged layout only): pages are int8 pools and per-(page-slot,
-        kv-head) f32 absmax scales ride the same page table as
-        ``k_scales``/``v_scales``.  Dequantization is fused into the
-        attention read (in-kernel for the flash path) — fp pages never
-        materialize.  Roughly halves page bytes vs bf16
-        (``1 + 4/head_dim`` vs 2 bytes per element).
+      config: a ``CacheConfig`` (layout / page / allocator / quant /
+        mesh knobs — see its docstring).  Default: ``CacheConfig()``,
+        the dense layout.
+      layout, page_size, alloc, pool_pages, kv_quant: **deprecated** —
+        the pre-PR-7 keyword spelling.  Still honored (a ``CacheConfig``
+        is built from them, bitwise-identical result) but emits a
+        ``DeprecationWarning``; mutually exclusive with ``config``.
 
     Returns a dict of arrays (shapes in the module docstring).  The paged
     dict additionally carries ``page_table`` (B, max_pages) int32 and
     ``seq_lens`` (B,) int32 — plus the ``alloc_*`` allocator arrays under
     ``alloc="dynamic"`` — so the whole decode state is one donatable
-    pytree.
+    pytree.  Under ``config.mesh`` every leaf comes back placed with its
+    ``NamedSharding`` (``cache_shardings``): the pool is physically
+    partitioned before the first prefill touches it.
     """
-    if layout not in ("dense", "paged"):
-        raise ValueError(f"unknown cache layout {layout!r}")
-    if kv_quant not in ("none", "int8"):
-        raise ValueError(f"unknown kv_quant {kv_quant!r} "
+    legacy = {k: v for k, v in zip(
+        _LEGACY_KEYS, (layout, page_size, alloc, pool_pages, kv_quant))
+        if v is not None}
+    if legacy:
+        if config is not None:
+            raise TypeError(
+                "init_cache: pass either config=CacheConfig(...) or the "
+                f"legacy keywords {sorted(legacy)}, not both")
+        warnings.warn(
+            f"init_cache keyword(s) {sorted(legacy)} are deprecated; pass "
+            "config=CacheConfig(...) instead", DeprecationWarning,
+            stacklevel=2)
+        config = CacheConfig(**legacy)
+    if config is None:
+        config = CacheConfig()
+
+    if config.layout not in ("dense", "paged"):
+        raise ValueError(f"unknown cache layout {config.layout!r}")
+    if config.kv_quant not in ("none", "int8"):
+        raise ValueError(f"unknown kv_quant {config.kv_quant!r} "
                          "(expected 'none' or 'int8')")
-    if kv_quant != "none" and layout != "paged":
+    if config.kv_quant != "none" and config.layout != "paged":
         raise ValueError(
-            f"kv_quant={kv_quant!r} requires layout='paged': the scale "
-            "rows ride the page table, and the dense decode path has no "
-            "fused dequant")
+            f"kv_quant={config.kv_quant!r} requires layout='paged': the "
+            "scale rows ride the page table, and the dense decode path "
+            "has no fused dequant")
     cache: dict = {}
     if cfg.family in ("ssm", "hybrid"):
-        if layout == "paged":
+        if config.layout == "paged":
             raise ValueError(
                 "paged layout applies to attention-family KV caches; "
                 f"family {cfg.family!r} keeps its O(1) SSM state dense")
@@ -160,41 +268,64 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
             cache["shared_k"] = jnp.zeros(
                 (sites, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)
             cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
-    elif layout == "paged":
-        max_pages = ceil_div(max_len, page_size)
-        n_pages = pool_pages if pool_pages is not None else batch * max_pages
-        pool_dtype = jnp.int8 if kv_quant == "int8" else dtype
+    elif config.layout == "paged":
+        page_sz = config.page_size
+        max_pages = ceil_div(max_len, page_sz)
+        n_pages = (config.pool_pages if config.pool_pages is not None
+                   else batch * max_pages)
+        shards = config.shards(cfg.n_kv_heads)
+        # the pool partitions page-dim-first under the pages policy: round
+        # the pool up so every shard owns an equal slab
+        n_pages = ceil_div(n_pages, shards) * shards
+        pool_dtype = jnp.int8 if config.kv_quant == "int8" else dtype
         cache["k_pages"] = jnp.zeros(
-            (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+            (cfg.n_layers, n_pages, page_sz, cfg.n_kv_heads, cfg.head_dim),
             pool_dtype)
         cache["v_pages"] = jnp.zeros_like(cache["k_pages"])
-        if kv_quant == "int8":
+        if config.kv_quant == "int8":
             # zero scales dequantize the zero-initialised pool to exact
             # zeros — indistinguishable from the fp layout's fresh pages
             cache["k_scales"] = jnp.zeros(
-                (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads),
+                (cfg.n_layers, n_pages, page_sz, cfg.n_kv_heads),
                 jnp.float32)
             cache["v_scales"] = jnp.zeros_like(cache["k_scales"])
-        if alloc == "dynamic":
+        if config.alloc == "dynamic":
             from repro.serving.allocator import SCRATCH_PAGE, attach_allocator
             cache["page_table"] = jnp.full((batch, max_pages), SCRATCH_PAGE,
                                            jnp.int32)
             cache["seq_lens"] = jnp.zeros((batch,), jnp.int32)
-            cache = attach_allocator(cache, n_pages)
+            cache = attach_allocator(cache, n_pages, shards)
         else:
             if n_pages < batch * max_pages:
                 raise ValueError(
                     f"static page tables need batch*max_pages = "
                     f"{batch * max_pages} pages; pool has {n_pages} "
                     f"(use alloc='dynamic' to oversubscribe)")
-            cache["page_table"] = default_page_table(batch, max_pages, alloc)
+            cache["page_table"] = default_page_table(batch, max_pages,
+                                                     config.alloc)
             cache["seq_lens"] = jnp.zeros((batch,), jnp.int32)
     else:
         cache["k"] = jnp.zeros(
             (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
             dtype)
         cache["v"] = jnp.zeros_like(cache["k"])
+    if config.mesh is not None:
+        shardings = cache_shardings(cfg, cache, config)
+        cache = {k: jax.device_put(v, shardings[k])
+                 for k, v in cache.items()}
     return cache
+
+
+def cache_shardings(cfg: ModelConfig, cache: dict,
+                    config: CacheConfig) -> dict:
+    """Per-leaf ``NamedSharding``s for a cache built with ``config``
+    (requires ``config.mesh``).  ``init_cache`` places leaves with these;
+    the scheduler re-pins after eager admission copy-backs; tests assert
+    the pool is *actually* partitioned against them."""
+    assert config.mesh is not None
+    specs = tree_specs(cache, config.logical_axes(cfg), config.mesh,
+                       SERVING_RULES)
+    return {k: NamedSharding(config.mesh, specs[k]) for k in cache}
 
 
 def page_nbytes(cache: dict) -> int:
@@ -211,16 +342,21 @@ def page_nbytes(cache: dict) -> int:
 
 def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
                        layout: str = "dense", dynamic: bool = False,
-                       kv_quant: str = "none") -> dict:
+                       kv_quant: str = "none",
+                       model_size: int | None = None) -> dict:
     """Logical axes per cache array (``docs/DESIGN.md`` §3).
 
-    ``kv_shard``: ``auto | heads | seq`` — ``seq`` means the dense cache's
-    sequence dim, or the paged pool's page dim, goes to ``model``.
-    ``dynamic`` adds the ``alloc_*`` allocator arrays (replicated: the
-    free list / refcounts are tiny int32 control state that every chip
-    needs whole — only ``alloc_held`` is per-sequence and follows batch).
-    ``kv_quant="int8"`` adds the scale pools, sharded exactly like their
-    int8 pages minus the trailing head_dim axis.
+    ``kv_shard``: ``auto | heads | seq | pages`` — ``seq``/``pages`` mean
+    the dense cache's sequence dim, or the paged pool's page dim, goes to
+    ``model``.  ``auto`` resolves against ``model_size`` when given (the
+    serving path passes the actual mesh extent), else the 16-way
+    reference-mesh heuristic.  ``dynamic`` adds the ``alloc_*`` allocator
+    arrays — their leading shard dim takes ``kv_pages`` so the free
+    stacks / refcounts live with the pool slabs they manage (replicated
+    when the pool is heads-sharded or unsharded, i.e. one flat shard);
+    ``alloc_held`` is per-sequence and follows batch.  ``kv_quant="int8"``
+    adds the scale pools, sharded exactly like their int8 pages minus the
+    trailing head_dim axis.
     """
     axes: dict = {}
     if cfg.family in ("ssm", "hybrid"):
@@ -229,11 +365,11 @@ def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
         axes["conv_B"] = (None, "batch", None, None)
         axes["conv_C"] = (None, "batch", None, None)
         if n_shared_sites(cfg):
-            kv = _kv_axes(cfg, kv_shard)
+            kv = _kv_axes(cfg, kv_shard, model_size)
             axes["shared_k"] = kv
             axes["shared_v"] = kv
     elif layout == "paged":
-        kv = _kv_axes(cfg, kv_shard)
+        kv = _kv_axes(cfg, kv_shard, model_size)
         # (L, P, page, KVH, hd): the per-sequence dims B/S are gone — the
         # pool's page dim takes the kv_seq split, heads keep theirs
         paged = (None, "kv_pages" if kv[2] == "kv_seq" else None,
@@ -246,24 +382,27 @@ def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
         axes["page_table"] = ("batch", None)
         axes["seq_lens"] = ("batch",)
         if dynamic:
-            axes["alloc_free"] = (None,)
-            axes["alloc_top"] = ()
-            axes["alloc_ref"] = (None,)
+            # (S, P/S) / (S,) / (S, P/S) / (B,)
+            axes["alloc_free"] = ("kv_pages", None)
+            axes["alloc_top"] = ("kv_pages",)
+            axes["alloc_ref"] = ("kv_pages", None)
             axes["alloc_held"] = ("batch",)
     else:
-        kv = _kv_axes(cfg, kv_shard)
+        kv = _kv_axes(cfg, kv_shard, model_size)
         axes["k"] = kv
         axes["v"] = kv
     return axes
 
 
-def _kv_axes(cfg: ModelConfig, kv_shard: str) -> tuple:
+def _kv_axes(cfg: ModelConfig, kv_shard: str,
+             model_size: int | None = None) -> tuple:
     # (L, B, S, KVH, hd)
     if kv_shard == "heads":
         return (None, "batch", None, "kv_heads", None)
-    if kv_shard == "seq":
+    if kv_shard in ("seq", "pages"):
         return (None, "batch", "kv_seq", None, None)
-    # auto: heads when they divide a 16-way model axis, else seq split
-    if cfg.n_kv_heads % 16 == 0:
+    # auto: heads when they divide the model axis (the 16-way reference
+    # mesh when no actual extent is supplied), else seq/pages split
+    if cfg.n_kv_heads % (model_size or 16) == 0:
         return (None, "batch", None, "kv_heads", None)
     return (None, "batch", "kv_seq", None, None)

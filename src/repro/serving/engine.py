@@ -25,15 +25,30 @@ it, one slot per step (the overwrite-before-visible invariant,
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.launch.sharding import activate_sharding
 from repro.models.config import ModelConfig
 from repro.models.transformer import apply_model
+from repro.serving.cache import SERVING_RULES, CacheConfig
 
 Params = dict
+
+
+def _mesh_context(mesh):
+    """Sharding context for serving model calls: under a mesh the
+    attention path routes paged KV through the shard_map'd partitioned
+    schedules (``models/attention.py``) and activation annotations bind;
+    without one this is a no-op.  ``SERVING_RULES`` pins the pool's page
+    dim to the ``model`` axis so decode collectives and the shard-local
+    allocator agree on the partitioning."""
+    if mesh is None:
+        return contextlib.nullcontext()
+    return activate_sharding(mesh, SERVING_RULES)
 
 
 def prefill_step(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
@@ -49,7 +64,8 @@ def prefill_step(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
 
 
 def validate_decode_cache(cache: dict, cfg: ModelConfig,
-                          mode: str | None = None) -> None:
+                          mode: str | None = None, *,
+                          config: CacheConfig | None = None) -> None:
     """Fail loudly on cache layouts the decode path cannot execute.
 
     The serving loop donates the cache into a jitted scan — a layout the
@@ -60,10 +76,26 @@ def validate_decode_cache(cache: dict, cfg: ModelConfig,
     combinations raise a ``NotImplementedError`` naming the combo instead
     of producing a wrong-result path.  All checks are on dtypes and keys
     (static metadata), so the call is trace-safe and free.
+
+    ``config`` (when given) is cross-checked against the cache it
+    allegedly built: a ``CacheConfig`` that disagrees with the pytree's
+    actual layout/quant would make the engine pick the wrong sharded
+    routing for it.
     """
     if mode is None:
         from repro.kernels.tiled_matmul.ops import kernel_mode
         mode = kernel_mode()
+    if config is not None:
+        if (config.layout == "paged") != ("k_pages" in cache):
+            raise ValueError(
+                f"CacheConfig(layout={config.layout!r}) does not match "
+                "this cache's layout — was it built with a different "
+                "config?")
+        if config.layout == "paged" and (
+                (config.kv_quant == "int8") != ("k_scales" in cache)):
+            raise ValueError(
+                f"CacheConfig(kv_quant={config.kv_quant!r}) does not "
+                "match this cache's page pools")
     if "k_pages" in cache:
         kd, vd = cache["k_pages"].dtype, cache["v_pages"].dtype
         has_scales = "k_scales" in cache or "v_scales" in cache
@@ -111,7 +143,8 @@ def cache_capacity(cache: dict) -> int | None:
 def prefill(params: Params, cache: dict, prompts: jax.Array,
             prompt_lens: jax.Array, cfg: ModelConfig, *,
             memory: jax.Array | None = None,
-            chunk: int | None = None, start_pos: int = 0):
+            chunk: int | None = None, start_pos: int = 0,
+            config: CacheConfig | None = None):
     """Prefill → decode handoff: commit prompt KV, return first logits.
 
     prompts (B, S_pad) int32, right-padded to the longest prompt;
@@ -136,12 +169,17 @@ def prefill(params: Params, cache: dict, prompts: jax.Array,
     tokens from there on.  ``prompt_lens`` stays absolute (prefix +
     suffix).
 
+    ``config`` (the cache's ``CacheConfig``) enables the sharded decode
+    routing when it carries a mesh — required whenever the cache was
+    built under one, or the eager prefill would fall back to the
+    unpartitioned path and GSPMD would gather the pool.
+
     Returns (next_logits (B, V) — logits at each sequence's last real
     prompt token — and the updated cache with ``seq_lens = prompt_lens``
     for the paged layout).
     """
     b, s_pad = prompts.shape
-    validate_decode_cache(cache, cfg)
+    validate_decode_cache(cache, cfg, config=config)
     capacity = cache_capacity(cache)
     if capacity is not None and start_pos + s_pad > capacity:
         # past capacity the paged scatter would clamp to the last page and
@@ -149,10 +187,13 @@ def prefill(params: Params, cache: dict, prompts: jax.Array,
         raise ValueError(f"prompt width {start_pos + s_pad} exceeds cache "
                          f"capacity {capacity} tokens")
     prompt_lens = jnp.asarray(prompt_lens, jnp.int32)
+    mesh = config.mesh if config is not None else None
     if chunk is None or s_pad <= chunk:
         pos0 = jnp.full((b,), start_pos, jnp.int32)
-        logits, cache, _ = apply_model(params, prompts, cfg, cache=cache,
-                                       cache_pos=pos0, memory=memory)
+        with _mesh_context(mesh):
+            logits, cache, _ = apply_model(params, prompts, cfg,
+                                           cache=cache, cache_pos=pos0,
+                                           memory=memory)
         next_logits = jnp.take_along_axis(
             logits, (prompt_lens - 1 - start_pos)[:, None, None],
             axis=1)[:, 0]
@@ -161,9 +202,10 @@ def prefill(params: Params, cache: dict, prompts: jax.Array,
         for c0 in range(0, s_pad, chunk):
             cs = min(chunk, s_pad - c0)
             pos0 = jnp.full((b,), start_pos + c0, jnp.int32)
-            logits, cache, _ = apply_model(
-                params, prompts[:, c0:c0 + cs], cfg, cache=cache,
-                cache_pos=pos0, memory=memory)
+            with _mesh_context(mesh):
+                logits, cache, _ = apply_model(
+                    params, prompts[:, c0:c0 + cs], cfg, cache=cache,
+                    cache_pos=pos0, memory=memory)
             if next_logits is None:
                 next_logits = jnp.zeros((b, logits.shape[-1]), logits.dtype)
             # each sequence's last real prompt token lives in exactly one
@@ -185,7 +227,8 @@ def prefill(params: Params, cache: dict, prompts: jax.Array,
 
 def serve_step(params: Params, cache: dict, tokens: jax.Array,
                pos: jax.Array | None, cfg: ModelConfig, *,
-               memory: jax.Array | None = None):
+               memory: jax.Array | None = None,
+               config: CacheConfig | None = None):
     """One decode step.
 
     tokens (B, 1) int32; pos is a scalar int32 (batch-synchronous, seed
@@ -198,20 +241,21 @@ def serve_step(params: Params, cache: dict, tokens: jax.Array,
     selects the flash engine (``auto`` + live Pallas kernels, or
     ``flash``), else the dense gather fallback.
     """
-    validate_decode_cache(cache, cfg)
+    validate_decode_cache(cache, cfg, config=config)
     if pos is None:
         if "seq_lens" not in cache:
             raise ValueError("pos=None requires a paged cache carrying "
                              "seq_lens; dense caches need an explicit pos")
         pos = cache["seq_lens"]
-    logits, new_cache, _ = apply_model(params, tokens, cfg, cache=cache,
-                                       cache_pos=pos, memory=memory)
+    with _mesh_context(config.mesh if config is not None else None):
+        logits, new_cache, _ = apply_model(params, tokens, cfg, cache=cache,
+                                           cache_pos=pos, memory=memory)
     return logits, new_cache
 
 
 def greedy_decode(params: Params, cache: dict, first_token: jax.Array,
                   start_pos, n_steps: int, cfg: ModelConfig, *,
-                  memory=None):
+                  memory=None, config: CacheConfig | None = None):
     """Batched greedy serving loop: one jitted ``lax.scan`` over steps.
 
     first_token (B, 1) int32; start_pos is an int (batch-synchronous), a
@@ -229,10 +273,12 @@ def greedy_decode(params: Params, cache: dict, first_token: jax.Array,
     from repro.kernels.tiled_matmul.ops import kernel_mode
     # the donated-cache scan would otherwise *silently* mis-read an
     # unsupported layout (e.g. int8 pages without scales) — fail here
-    validate_decode_cache(cache, cfg, kernel_mode())
+    validate_decode_cache(cache, cfg, kernel_mode(), config=config)
     pos_arg = jnp.asarray(0 if from_cache_lens else start_pos, jnp.int32)
+    mesh = config.mesh if config is not None else None
     toks, cache = _greedy_run(params, cache, first_token, pos_arg, memory,
-                              cfg, n_steps, from_cache_lens, kernel_mode())
+                              cfg, n_steps, from_cache_lens, kernel_mode(),
+                              mesh)
     # (n_steps, B, 1) → (B, n_steps), oldest first
     seq = jnp.concatenate([first_token, jnp.swapaxes(toks[..., 0], 0, 1)],
                           axis=1)
@@ -241,15 +287,20 @@ def greedy_decode(params: Params, cache: dict, first_token: jax.Array,
 
 @functools.partial(jax.jit, donate_argnums=(1,),
                    static_argnames=("cfg", "n_steps", "from_cache_lens",
-                                    "mode"))
+                                    "mode", "mesh"))
 def _greedy_run(params, cache, tok, pos_arg, memory, cfg: ModelConfig,
-                n_steps: int, from_cache_lens: bool, mode: str):
+                n_steps: int, from_cache_lens: bool, mode: str,
+                mesh=None):
     """Module-level jitted scan so repeated ``greedy_decode`` calls hit
     the jit cache (a closure-jitted loop would re-trace — and re-compile
     the whole n_steps scan — on every call).  ``mode`` (the live
     ``kernel_mode()``) only keys the cache: attention routing reads the
     env at trace time, so without it a REPRO_KERNELS change mid-process
-    would silently replay the previously-traced path."""
+    would silently replay the previously-traced path.  ``mesh`` is a
+    static operand for the same reason — the sharded attention routing is
+    a trace-time decision, and a ``Mesh`` is hashable — and the sharding
+    context is (re)entered *inside* so the trace never depends on ambient
+    contextvar state it isn't keyed on."""
 
     def step(carry, _):
         cache, tok, pos = carry
@@ -261,6 +312,7 @@ def _greedy_run(params, cache, tok, pos_arg, memory, cfg: ModelConfig,
     # read start positions from the donated cache itself — passing
     # seq_lens as a separate operand would alias the donated buffer
     pos0 = cache["seq_lens"] if from_cache_lens else pos_arg
-    (cache, _, _), toks = jax.lax.scan(step, (cache, tok, pos0),
-                                       length=n_steps)
+    with _mesh_context(mesh):
+        (cache, _, _), toks = jax.lax.scan(step, (cache, tok, pos0),
+                                           length=n_steps)
     return toks, cache

@@ -40,17 +40,33 @@ shows it end to end with int8 projections.  Architecture notes:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
+from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.serving import allocator as alloc
-from repro.serving.cache import init_cache
+from repro.serving.cache import CacheConfig, cache_shardings, init_cache
 from repro.serving.engine import _greedy_run, prefill
 
-__all__ = ["Request", "Scheduler"]
+__all__ = ["Request", "Scheduler", "PoolOccupancy"]
+
+
+class PoolOccupancy(NamedTuple):
+    """Pool usage snapshot.  ``used``/``total`` are global page counts;
+    ``per_shard`` is ((used, size), …) for each pool shard.  Under
+    per-shard free lists the global number alone is a lie when shards are
+    imbalanced: admission gates on *every* shard covering its round-robin
+    share, so the fullest shard in ``per_shard`` is the binding
+    constraint, not ``total - used``."""
+
+    used: int
+    total: int
+    per_shard: tuple[tuple[int, int], ...]
 
 
 @dataclasses.dataclass
@@ -81,9 +97,19 @@ class Scheduler:
       params / cfg: the model (any attention-family config).
       slots: batch width B of the decode step (live-sequence capacity).
       max_len: per-sequence context bound (page-table width).
-      page_size / pool_pages: pool geometry (``pool_pages`` may be far
-        below ``slots * ceil(max_len/page_size)`` — admission control
-        and prefix sharing are what make oversubscription safe).
+      config: a ``CacheConfig`` with ``layout="paged"``,
+        ``alloc="dynamic"`` — pool geometry (``page_size`` /
+        ``pool_pages``; the pool may be far below ``slots *
+        ceil(max_len/page_size)`` — admission control and prefix sharing
+        are what make oversubscription safe), ``kv_quant`` (int8 pools
+        roughly halve page bytes, so the same pool serves ~2x the tokens
+        per HBM byte; prefix sharing and CoW carry the scale rows), and
+        the ``mesh`` knob: under a mesh the pool is partitioned, the
+        allocator runs per-shard free lists, and every decode tick goes
+        through the shard_map'd partitioned attention.  Default:
+        ``CacheConfig(layout="paged", alloc="dynamic", page_size=16)``
+        (the scheduler's historical 16-token pages, not CacheConfig's
+        64-token serving default).
       prefill_chunk: commit prompts in fixed-size chunks through the
         paged flash path (None = one pass; right below ~1k prompts).
       share_prefix: alias common prompt-prefix pages between live
@@ -91,31 +117,61 @@ class Scheduler:
       bucket: prompts are right-padded to a multiple of this before
         prefill (bounds the number of traced prefill shapes).
       eos_id: optional early-stop token id.
-      kv_quant: ``"none"`` or ``"int8"`` — the page pool's storage
-        scheme (``serving/cache.init_cache``).  int8 pools roughly halve
-        page bytes, so the same ``pool_pages`` serves ~2x the tokens per
-        HBM byte; prefix sharing and CoW carry the scale rows along.
+      page_size / pool_pages / kv_quant: **deprecated** keyword spelling
+        of the ``config`` fields (pre-PR-7); still honored with a
+        ``DeprecationWarning``, mutually exclusive with ``config``.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_len: int = 256, page_size: int = 16,
+                 max_len: int = 256,
+                 config: CacheConfig | None = None,
+                 page_size: int | None = None,
                  pool_pages: int | None = None,
+                 kv_quant: str | None = None,
                  prefill_chunk: int | None = None,
                  share_prefix: bool = True, bucket: int = 16,
-                 eos_id: int | None = None, dtype=jnp.float32,
-                 kv_quant: str = "none"):
-        self.params, self.cfg = params, cfg
-        self.page_size, self.bucket = page_size, bucket
+                 eos_id: int | None = None, dtype=jnp.float32):
+        legacy = {k: v for k, v in (("page_size", page_size),
+                                    ("pool_pages", pool_pages),
+                                    ("kv_quant", kv_quant)) if v is not None}
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "Scheduler: pass either config=CacheConfig(...) or the "
+                    f"legacy keywords {sorted(legacy)}, not both")
+            warnings.warn(
+                f"Scheduler keyword(s) {sorted(legacy)} are deprecated; "
+                "pass config=CacheConfig(layout='paged', alloc='dynamic', "
+                "...) instead", DeprecationWarning, stacklevel=2)
+            config = CacheConfig(layout="paged", alloc="dynamic",
+                                 page_size=page_size or 16,
+                                 pool_pages=pool_pages,
+                                 kv_quant=kv_quant or "none")
+        if config is None:
+            config = CacheConfig(layout="paged", alloc="dynamic",
+                                 page_size=16)
+        if config.layout != "paged" or config.alloc != "dynamic":
+            raise ValueError(
+                "Scheduler needs CacheConfig(layout='paged', "
+                f"alloc='dynamic'); got layout={config.layout!r}, "
+                f"alloc={config.alloc!r}")
+        self.params, self.cfg, self.config = params, cfg, config
+        self.page_size, self.bucket = config.page_size, bucket
         self.prefill_chunk, self.share_prefix = prefill_chunk, share_prefix
         self.eos_id = eos_id
         self.cache = init_cache(cfg, slots, max_len, dtype=dtype,
-                                layout="paged", page_size=page_size,
-                                alloc="dynamic", pool_pages=pool_pages,
-                                kv_quant=kv_quant)
+                                config=config)
+        # expected leaf placements (mesh only): eager admission paths
+        # (slice-view prefill copy-backs, allocator scatters) re-pin
+        # against these so the partitioned-pool invariant survives
+        # between jitted ticks
+        self._shardings = (cache_shardings(cfg, self.cache, config)
+                           if config.mesh is not None else None)
         self.slots: list[_Slot | None] = [None] * slots
         self.queue: deque[Request] = deque()
         self.finished: dict[int, np.ndarray] = {}
         self.occupancy_log: list[int] = []
+        self.shard_occupancy_log: list[tuple[int, ...]] = []
         self._next_rid = 0
         self._ticks = 0
 
@@ -141,9 +197,11 @@ class Scheduler:
         return rid
 
     # -- introspection -----------------------------------------------------
-    def pool_occupancy(self) -> tuple[int, int]:
-        """(pages in use, pool size) right now."""
-        return alloc.pool_occupancy(self.cache)
+    def pool_occupancy(self) -> PoolOccupancy:
+        """Global *and* per-shard pool usage right now (``PoolOccupancy``;
+        indexes [0]/[1] stay (used, total) for tuple-shaped callers)."""
+        used, total = alloc.pool_occupancy(self.cache)
+        return PoolOccupancy(used, total, alloc.shard_occupancy(self.cache))
 
     @property
     def n_active(self) -> int:
@@ -159,7 +217,9 @@ class Scheduler:
         self._decode()
         done = self._retire()
         self._ticks += 1
-        self.occupancy_log.append(self.pool_occupancy()[0])
+        occ = self.pool_occupancy()
+        self.occupancy_log.append(occ.used)
+        self.shard_occupancy_log.append(tuple(u for u, _ in occ.per_shard))
         return done
 
     def run(self, max_ticks: int | None = None) -> dict[int, np.ndarray]:
@@ -251,14 +311,29 @@ class Scheduler:
         nl, view = prefill(
             self.params, view, jnp.asarray(padded[None]),
             jnp.asarray([prompt.size], jnp.int32), self.cfg,
-            chunk=self.prefill_chunk, start_pos=start)
+            chunk=self.prefill_chunk, start_pos=start,
+            config=self.config)
         from repro.serving.cache import PAGE_STATE_KEYS
         for key in PAGE_STATE_KEYS:
             if key in view:
                 self.cache[key] = view[key]
         self.cache["seq_lens"] = self.cache["seq_lens"].at[b].set(
             view["seq_lens"][0])
+        self._pin_shardings()
         return int(jnp.argmax(nl[0]))
+
+    def _pin_shardings(self):
+        """Re-place cache leaves on their expected shardings (mesh only).
+        Eager host-side mutations (admission scatters, prefill view
+        copy-backs) can leave a leaf with a propagated-but-different
+        placement; the jitted tick donates the cache, so its leaves must
+        arrive partitioned exactly as compiled or XLA reshards (or worse,
+        gathers) per tick.  ``device_put`` onto the matching sharding is
+        a no-op for already-correct leaves."""
+        if self._shardings is None:
+            return
+        self.cache = {k: jax.device_put(v, self._shardings[k])
+                      for k, v in self.cache.items()}
 
     def _decode(self):
         if not self.n_active:
@@ -267,11 +342,15 @@ class Scheduler:
         active = np.asarray([s is not None for s in self.slots])
         tok = jnp.asarray([[s.last_token if s else 0] for s in self.slots],
                           jnp.int32)
+        # the donated cache must arrive partitioned exactly as compiled —
+        # eager retire/admit scatters since the last tick may have moved
+        # placements
+        self._pin_shardings()
         # the static-batch loop's own jitted scan body, n_steps=1: one
         # compile shared with greedy_decode, cache donated in and out
         toks, self.cache = _greedy_run(
             self.params, self.cache, tok, jnp.asarray(0, jnp.int32), None,
-            self.cfg, 1, True, kernel_mode())
+            self.cfg, 1, True, kernel_mode(), self.config.mesh)
         nxt = np.asarray(toks)[0, :, 0]
         # idle rows advanced their (zero) lengths and wrote garbage to the
         # scratch page; re-pin them so their walk never grows

@@ -31,8 +31,9 @@ from repro.core.quantization import qmax_for_bits, quantize_kv
 from repro.kernels.flash_attention.ops import paged_decode_attention
 from repro.models.transformer import init_model
 from repro.serving import allocator as alloc
-from repro.serving.cache import (PAGE_STATE_KEYS, cache_logical_axes,
-                                 default_page_table, init_cache, page_nbytes)
+from repro.serving.cache import (PAGE_STATE_KEYS, CacheConfig,
+                                 cache_logical_axes, default_page_table,
+                                 init_cache, page_nbytes)
 from repro.serving.engine import (greedy_decode, prefill, serve_step,
                                   validate_decode_cache)
 from repro.serving.scheduler import Scheduler
@@ -128,8 +129,9 @@ def test_quantize_kv_roundtrip():
 # ---------------------------------------------------------------------------
 def test_init_cache_int8_shapes_and_errors():
     cfg = get_smoke_config("qwen2_5_3b")
-    cache = init_cache(cfg, 2, max_len=40, layout="paged", page_size=16,
-                       kv_quant="int8")
+    cache = init_cache(cfg, 2, max_len=40,
+                       config=CacheConfig(layout="paged", page_size=16,
+                                          kv_quant="int8"))
     mp = 3
     assert cache["k_pages"].dtype == jnp.int8
     assert cache["v_pages"].dtype == jnp.int8
@@ -138,17 +140,19 @@ def test_init_cache_int8_shapes_and_errors():
     assert cache["k_scales"].dtype == jnp.float32
     assert cache["v_scales"].shape == cache["k_scales"].shape
     with pytest.raises(ValueError, match="layout='paged'"):
-        init_cache(cfg, 2, max_len=40, kv_quant="int8")
+        init_cache(cfg, 2, max_len=40, config=CacheConfig(kv_quant="int8"))
     with pytest.raises(ValueError, match="kv_quant"):
-        init_cache(cfg, 2, max_len=40, layout="paged", kv_quant="int4")
+        init_cache(cfg, 2, max_len=40,
+                   config=CacheConfig(layout="paged", kv_quant="int4"))
 
 
 def test_page_nbytes_int8_ratio():
     cfg = get_smoke_config("qwen2_5_3b")
-    kw = dict(layout="paged", page_size=8)
-    fp = init_cache(cfg, 2, max_len=32, dtype=jnp.bfloat16, **kw)
-    q = init_cache(cfg, 2, max_len=32, dtype=jnp.bfloat16, kv_quant="int8",
-                   **kw)
+    fp = init_cache(cfg, 2, max_len=32, dtype=jnp.bfloat16,
+                    config=CacheConfig(layout="paged", page_size=8))
+    q = init_cache(cfg, 2, max_len=32, dtype=jnp.bfloat16,
+                   config=CacheConfig(layout="paged", page_size=8,
+                                      kv_quant="int8"))
     # per element: bf16 pages cost 2 bytes; int8 pages cost 1 + 4/head_dim
     # (the f32 scale amortized over its row) → ratio (1 + 4/hd) / 2
     hd = cfg.head_dim
@@ -229,8 +233,9 @@ def test_int8_decode_parity_sweep(g, window, page, lens):
 # ---------------------------------------------------------------------------
 def test_unsupported_cache_combos_raise():
     cfg = get_smoke_config("qwen2_5_3b").replace(dtype="float32")
-    cache = init_cache(cfg, 1, max_len=16, layout="paged", page_size=8,
-                       kv_quant="int8")
+    cache = init_cache(cfg, 1, max_len=16,
+                       config=CacheConfig(layout="paged", page_size=8,
+                                          kv_quant="int8"))
     # int8 pages with the scale pools stripped: named combo, no garbage
     broken = {k: v for k, v in cache.items()
               if k not in ("k_scales", "v_scales")}
@@ -263,7 +268,8 @@ def test_greedy_decode_rejects_scaleless_int8():
                                                  dtype="float32")
     params = init_model(KEY, cfg)
     cache = init_cache(cfg, 1, max_len=16, dtype=jnp.float32,
-                       layout="paged", page_size=8, kv_quant="int8")
+                       config=CacheConfig(layout="paged", page_size=8,
+                                          kv_quant="int8"))
     broken = {k: v for k, v in cache.items()
               if k not in ("k_scales", "v_scales")}
     tok = jnp.zeros((1, 1), jnp.int32)
@@ -277,8 +283,9 @@ def test_greedy_decode_rejects_scaleless_int8():
 # ---------------------------------------------------------------------------
 def test_fork_cow_copies_scale_rows():
     cfg = get_smoke_config("qwen2_5_3b")
-    cache = init_cache(cfg, 2, max_len=32, layout="paged", page_size=8,
-                       alloc="dynamic", kv_quant="int8")
+    cache = init_cache(cfg, 2, max_len=32,
+                       config=CacheConfig(layout="paged", page_size=8,
+                                          alloc="dynamic", kv_quant="int8"))
     cache, ok = alloc.admit_sequence(cache, 0, 20)
     assert bool(ok)
     # stamp recognizable values on the parent's boundary page (page 1,
@@ -315,8 +322,9 @@ def test_fork_then_decode_bitwise_int8():
     outs = {}
     for copy in (False, True):
         cache = init_cache(cfg, 2, max_len=24, dtype=jnp.float32,
-                           layout="paged", page_size=4, alloc="dynamic",
-                           kv_quant="int8")
+                           config=CacheConfig(layout="paged", page_size=4,
+                                              alloc="dynamic",
+                                              kv_quant="int8"))
         cache, ok = alloc.admit_sequence(cache, 0, budget)
         assert bool(ok)
         t0 = _prefill_view(params, cache, cfg, 0, prompt)
@@ -350,8 +358,9 @@ def test_paged_int8_engine_matches_fp():
     outs, logits = {}, {}
     for quant in ("none", "int8"):
         cache = init_cache(cfg, b, max_len=32, dtype=jnp.float32,
-                           layout="paged", page_size=8, alloc="striped",
-                           kv_quant=quant)
+                           config=CacheConfig(layout="paged", page_size=8,
+                                              alloc="striped",
+                                              kv_quant=quant))
         nl, cache = prefill(params, cache, toks, lens, cfg)
         first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
         out, _ = greedy_decode(params, cache, first, None, steps, cfg)
@@ -376,7 +385,8 @@ def test_serve_step_int8_interpret_matches_ref(monkeypatch):
     for mode in ("ref", "pallas_interpret"):
         monkeypatch.setenv("REPRO_KERNELS", mode)
         cache = init_cache(cfg, 2, max_len=16, dtype=jnp.float32,
-                           layout="paged", page_size=4, kv_quant="int8")
+                           config=CacheConfig(layout="paged", page_size=4,
+                                              kv_quant="int8"))
         _, cache = prefill(params, cache, toks, lens, cfg)
         lg, _ = serve_step(params, cache, toks[:, :1], None, cfg)
         got[mode] = np.asarray(lg)
@@ -397,9 +407,11 @@ def test_scheduler_int8_prefix_sharing_bitwise():
                RNG.integers(0, cfg.vocab_size, 5).astype(np.int32)]
     results = {}
     for share in (True, False):
-        sched = Scheduler(params, cfg, slots=2, max_len=32, page_size=4,
-                          pool_pages=16, bucket=4, share_prefix=share,
-                          kv_quant="int8")
+        sched = Scheduler(params, cfg, slots=2, max_len=32, bucket=4,
+                          share_prefix=share,
+                          config=CacheConfig(layout="paged", alloc="dynamic",
+                                             page_size=4, pool_pages=16,
+                                             kv_quant="int8"))
         for p in prompts:
             sched.submit(p, 4)
         results[share] = sched.run(max_ticks=64)

@@ -29,7 +29,8 @@ from repro.kernels.flash_attention.decode import (flash_decode_schedule,
 from repro.kernels.flash_attention.ops import paged_decode_attention
 from repro.kernels.flash_attention.ref import paged_gather
 from repro.models.transformer import init_model
-from repro.serving.cache import default_page_table, init_cache
+from repro.serving.cache import (CacheConfig, default_page_table,
+                                 init_cache)
 from repro.serving.engine import greedy_decode, prefill, serve_step
 
 RNG = np.random.default_rng(0)
@@ -182,7 +183,8 @@ def test_page_table_allocations_are_disjoint_and_complete():
 
 def test_init_cache_paged_shapes():
     cfg = get_smoke_config("qwen2_5_3b")
-    cache = init_cache(cfg, 2, max_len=40, layout="paged", page_size=16)
+    cache = init_cache(cfg, 2, max_len=40,
+                       config=CacheConfig(layout="paged", page_size=16))
     mp = 3                                    # ceil(40/16)
     assert cache["k_pages"].shape == (cfg.n_layers, 2 * mp, 16,
                                       cfg.n_kv_heads, cfg.head_dim)
@@ -192,7 +194,7 @@ def test_init_cache_paged_shapes():
     assert cache["seq_lens"].shape == (2,)
     with pytest.raises(ValueError):
         init_cache(get_smoke_config("mamba2_370m"), 2, max_len=40,
-                   layout="paged")
+                   config=CacheConfig(layout="paged"))
 
 
 def test_cache_logical_axes_paged():
@@ -228,9 +230,9 @@ def test_paged_engine_matches_dense_mixed_lengths():
     b = toks.shape[0]
     outs, logits = [], []
     for layout, page in (("dense", None), ("paged", 4)):
-        kw = {} if page is None else {"layout": "paged", "page_size": page,
-                                      "alloc": "striped"}
-        cache = init_cache(cfg, b, max_len=20, dtype=jnp.float32, **kw)
+        cc = (CacheConfig() if page is None else
+              CacheConfig(layout="paged", page_size=page, alloc="striped"))
+        cache = init_cache(cfg, b, max_len=20, dtype=jnp.float32, config=cc)
         nl, cache = prefill(params, cache, toks, lens, cfg)
         first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
         start = lens if page is None else None
@@ -249,7 +251,8 @@ def test_paged_engine_matches_per_sequence_loop():
     single-sequence decodes — the strictest end-to-end oracle."""
     cfg, params, toks, lens = _engine_setup(b=2, s_pad=8)
     cache = init_cache(cfg, 2, max_len=16, dtype=jnp.float32,
-                       layout="paged", page_size=4, alloc="striped")
+                       config=CacheConfig(layout="paged", page_size=4,
+                                          alloc="striped"))
     nl, cache = prefill(params, cache, toks, lens, cfg)
     first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
     out, _ = greedy_decode(params, cache, first, None, 3, cfg)
@@ -294,8 +297,9 @@ def test_gemma2_local_global_paged_decode():
     paged path: per-step logits match the dense layout."""
     cfg, params, toks, lens = _engine_setup(arch="gemma2_27b", b=2, s_pad=6)
     cd = init_cache(cfg, 2, max_len=16, dtype=jnp.float32)
-    cp = init_cache(cfg, 2, max_len=16, dtype=jnp.float32, layout="paged",
-                    page_size=4, alloc="striped")
+    cp = init_cache(cfg, 2, max_len=16, dtype=jnp.float32,
+                    config=CacheConfig(layout="paged", page_size=4,
+                                       alloc="striped"))
     nld, cd = prefill(params, cd, toks, lens, cfg)
     nlp, cp = prefill(params, cp, toks, lens, cfg)
     np.testing.assert_allclose(np.asarray(nld), np.asarray(nlp),
@@ -319,7 +323,7 @@ def test_serve_step_interpret_kernel_end_to_end(monkeypatch):
     for mode in ("ref", "pallas_interpret"):
         monkeypatch.setenv("REPRO_KERNELS", mode)
         cache = init_cache(cfg, 2, max_len=16, dtype=jnp.float32,
-                           layout="paged", page_size=4)
+                           config=CacheConfig(layout="paged", page_size=4))
         _, cache = prefill(params, cache, toks, lens, cfg)
         lg, _ = serve_step(params, cache, toks[:, :1], None, cfg)
         caches[mode] = np.asarray(lg)

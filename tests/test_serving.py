@@ -37,8 +37,8 @@ from repro.kernels.flash_attention.decode import (flash_decode_schedule,
 from repro.kernels.flash_attention.ops import paged_decode_attention
 from repro.models.transformer import init_model
 from repro.serving import allocator as al
-from repro.serving.cache import (cache_logical_axes, default_page_table,
-                                 init_cache)
+from repro.serving.cache import (CacheConfig, cache_logical_axes,
+                                 default_page_table, init_cache)
 from repro.serving.engine import _greedy_run, greedy_decode, prefill
 from repro.serving.scheduler import Scheduler
 
@@ -48,8 +48,20 @@ KEY = jax.random.PRNGKey(0)
 
 def _dyn_cache(batch=3, max_len=64, page=8, pool=None, arch="qwen2_5_3b"):
     cfg = get_smoke_config(arch)
-    return init_cache(cfg, batch, max_len=max_len, layout="paged",
-                      page_size=page, alloc="dynamic", pool_pages=pool)
+    return init_cache(cfg, batch, max_len=max_len,
+                      config=CacheConfig(layout="paged", page_size=page,
+                                         alloc="dynamic", pool_pages=pool))
+
+
+def _flat_alloc(cache):
+    """(ref, top, free) flattened over the shard dim — the single-shard
+    tests below reason about the pool globally; ``free`` is only the live
+    stack entries (global page ids), concatenated shard by shard."""
+    tops = np.asarray(cache["alloc_top"])
+    ref = np.asarray(cache["alloc_ref"]).reshape(-1)
+    free = np.concatenate([np.asarray(cache["alloc_free"])[s, :int(t)]
+                           for s, t in enumerate(tops)])
+    return ref, int(tops.sum()), free
 
 
 # ---------------------------------------------------------------------------
@@ -57,10 +69,8 @@ def _dyn_cache(batch=3, max_len=64, page=8, pool=None, arch="qwen2_5_3b"):
 # ---------------------------------------------------------------------------
 def _check_invariants(cache, mirror_refs):
     """cache allocator state vs a host mirror {page: refcount}."""
-    n = cache["alloc_free"].shape[0]
-    ref = np.asarray(cache["alloc_ref"])
-    top = int(cache["alloc_top"])
-    free = np.asarray(cache["alloc_free"])[:top]
+    n = cache["alloc_ref"].size
+    ref, top, free = _flat_alloc(cache)
     # refcounts match the mirror exactly (scratch page pinned at >= 1)
     want = np.zeros(n, np.int32)
     want[al.SCRATCH_PAGE] = 1
@@ -157,13 +167,13 @@ def test_refcount_shared_page_survives_parent_free():
     shared = np.asarray(cache["page_table"][0])[:2]
     np.testing.assert_array_equal(np.asarray(cache["page_table"][1])[:2],
                                   shared)
-    assert all(int(cache["alloc_ref"][p]) == 2 for p in shared)
+    ref, _, _ = _flat_alloc(cache)
+    assert all(int(ref[p]) == 2 for p in shared)
     cache = al.free_sequence(cache, 0)
     # still referenced by the child: not recycled
-    assert all(int(cache["alloc_ref"][p]) == 1 for p in shared)
-    top = int(cache["alloc_top"])
-    assert set(shared.tolist()).isdisjoint(
-        np.asarray(cache["alloc_free"])[:top].tolist())
+    ref, _, free = _flat_alloc(cache)
+    assert all(int(ref[p]) == 1 for p in shared)
+    assert set(shared.tolist()).isdisjoint(free.tolist())
     cache = al.free_sequence(cache, 1)
     assert al.pool_occupancy(cache) == (1, 16)          # scratch only
 
@@ -197,7 +207,7 @@ def test_dynamic_table_bitwise_matches_contiguous():
     hist_v = RNG.normal(size=(t, kh, d)).astype(np.float32)
     q = jnp.asarray(RNG.normal(size=(1, 1, 4, d)).astype(np.float32))
     lens = jnp.asarray([50], jnp.int32)
-    pool_shape = (int(cache["alloc_free"].shape[0]), page, kh, d)
+    pool_shape = (int(cache["k_pages"].shape[1]), page, kh, d)
 
     outs = []
     for table in (row[None], np.asarray(default_page_table(1, t // page))):
@@ -278,7 +288,8 @@ def test_chunked_prefill_matches_one_pass():
     results = {}
     for label, chunk in (("onepass", None), ("chunk7", 7), ("chunk8", 8)):
         cache = init_cache(cfg, b, max_len=40, dtype=jnp.float32,
-                           layout="paged", page_size=4, alloc="striped")
+                           config=CacheConfig(layout="paged", page_size=4,
+                                              alloc="striped"))
         nl, cache = prefill(params, cache, toks, lens, cfg, chunk=chunk)
         first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
         out, _ = greedy_decode(params, cache, first, None, 3, cfg)
@@ -306,7 +317,7 @@ def test_chunked_prefill_interpret_kernel(monkeypatch):
         # q_chunk 8 < chunk 13 forces a genuine multi-block grid
         monkeypatch.setattr(attention, "PAGED_PREFILL_CHUNK_Q", 8)
         cache = init_cache(cfg, 2, max_len=40, dtype=jnp.float32,
-                           layout="paged", page_size=4)
+                           config=CacheConfig(layout="paged", page_size=4))
         nls[mode], _ = prefill(params, cache, toks, lens, cfg, chunk=13)
     np.testing.assert_allclose(np.asarray(nls["ref"]),
                                np.asarray(nls["pallas_interpret"]),
@@ -384,11 +395,14 @@ def test_init_cache_dynamic_and_axes():
     cfg = get_smoke_config("qwen2_5_3b")
     axes = cache_logical_axes(cfg, layout="paged", dynamic=True)
     assert axes["alloc_held"] == ("batch",)
-    assert axes["alloc_free"] == (None,)
+    # free stacks / refcounts shard with the pool slabs they manage
+    assert axes["alloc_free"] == ("kv_pages", None)
+    assert axes["alloc_top"] == ("kv_pages",)
     # static tables cannot oversubscribe the pool
     with pytest.raises(ValueError, match="dynamic"):
-        init_cache(cfg, 2, max_len=40, layout="paged", page_size=16,
-                   pool_pages=3)
+        init_cache(cfg, 2, max_len=40,
+                   config=CacheConfig(layout="paged", page_size=16,
+                                      pool_pages=3))
 
 
 # ---------------------------------------------------------------------------
@@ -396,7 +410,8 @@ def test_init_cache_dynamic_and_axes():
 # ---------------------------------------------------------------------------
 def _standalone(params, cfg, prompt, n_new):
     cache = init_cache(cfg, 1, max_len=64, dtype=jnp.float32,
-                       layout="paged", page_size=4, alloc="striped")
+                       config=CacheConfig(layout="paged", page_size=4,
+                                          alloc="striped"))
     nl, cache = prefill(params, cache, jnp.asarray(prompt[None]),
                         jnp.asarray([len(prompt)], jnp.int32), cfg)
     first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
@@ -423,8 +438,9 @@ def test_scheduler_matches_isolated_requests():
         rng.integers(0, cfg.vocab_size, 5),
     ]
     budgets = [4, 5, 3, 4]
-    sched = Scheduler(params, cfg, slots=3, max_len=64, page_size=4,
-                      pool_pages=24, bucket=4)
+    sched = Scheduler(params, cfg, slots=3, max_len=64, bucket=4,
+                      config=CacheConfig(layout="paged", alloc="dynamic",
+                                         page_size=4, pool_pages=24))
     rids = [sched.submit(prompts[0], budgets[0]),
             sched.submit(prompts[1], budgets[1])]
     sched.step()                                  # arrivals mid-stream
@@ -436,7 +452,9 @@ def test_scheduler_matches_isolated_requests():
         np.testing.assert_array_equal(
             out[rid], _standalone(params, cfg, prompts[i], budgets[i]))
     # every page recycled at drain: only the scratch page is held
-    assert sched.pool_occupancy() == (1, 24)
+    occ = sched.pool_occupancy()
+    assert (occ.used, occ.total) == (1, 24)
+    assert sum(u for u, _ in occ.per_shard) == occ.used
     assert max(sched.occupancy_log) > 1
 
 
@@ -448,8 +466,10 @@ def test_scheduler_admission_waits_for_pages():
     params = init_model(KEY, cfg)
     rng = np.random.default_rng(5)
     prompts = [rng.integers(0, cfg.vocab_size, 8) for _ in range(2)]
-    sched = Scheduler(params, cfg, slots=2, max_len=32, page_size=4,
-                      pool_pages=5, bucket=4, share_prefix=False)
+    sched = Scheduler(params, cfg, slots=2, max_len=32, bucket=4,
+                      share_prefix=False,
+                      config=CacheConfig(layout="paged", alloc="dynamic",
+                                         page_size=4, pool_pages=5))
     r0 = sched.submit(prompts[0], 3)     # needs 3 pages of the 4 usable
     r1 = sched.submit(prompts[1], 3)
     sched.step()
@@ -467,7 +487,9 @@ def test_scheduler_rejects_impossible_request():
     cfg = get_smoke_config("qwen2_5_3b").replace(quant_proj="none",
                                                  dtype="float32")
     params = init_model(KEY, cfg)
-    sched = Scheduler(params, cfg, slots=2, max_len=32, page_size=8)
+    sched = Scheduler(params, cfg, slots=2, max_len=32,
+                      config=CacheConfig(layout="paged", alloc="dynamic",
+                                         page_size=8))
     with pytest.raises(ValueError, match="pages"):
         sched.submit(np.arange(10, dtype=np.int32), max_new_tokens=40)
     assert not sched.queue
@@ -485,7 +507,7 @@ def test_greedy_decode_hits_jit_cache():
 
     def one_round():
         cache = init_cache(cfg, 2, max_len=16, dtype=jnp.float32,
-                           layout="paged", page_size=4)
+                           config=CacheConfig(layout="paged", page_size=4))
         nl, cache = prefill(params, cache, toks, lens, cfg)
         first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
         greedy_decode(params, cache, first, None, 2, cfg)
