@@ -21,13 +21,23 @@ lengths, mixed generation budgets — served two ways:
     start the next batch (every sequence holds its pages, and its batch
     slot, until the slowest one finishes).
 
+The trace also runs per *family* through the identical loop — mamba2
+(pure-SSM slot state), zamba2 (hybrid slots + shared KV) and
+granite-MoE (paged KV, S=1 expert dispatch) rows sit next to the
+attention rows; the sequence-state registry (``serving/state.py``) is
+what makes the scheduler code path literally the same.  int8-KV and
+mesh variants only apply to page-pool families.
+
 Reported per row: generated tokens/s (host wall time — ordering-only on
-CPU, see benchmarks/common.py), decode steps taken, and page-pool
+CPU, see benchmarks/common.py), decode steps taken, page/slot-pool
 occupancy (peak / mean over ticks vs the pool size; sharded rows add
 ``shard_peaks``, the per-shard page peaks — the fullest shard is what
-admission actually gates on).  The occupancy columns are exact
-regardless of host timing: they count pages through the allocator, the
-serving analogue of the flash engine's blocks-touched counters.
+admission actually gates on), and request-level latency percentiles:
+TTFT (submit → first token, p50/p95) and per-token decode latency
+(p50/p95), joined from the scheduler's request event log and per-tick
+wall times.  The occupancy columns are exact regardless of host timing:
+they count pages through the allocator, the serving analogue of the
+flash engine's blocks-touched counters.
 
 Run: ``python -m benchmarks.serving [--smoke] [--json PATH] [--mesh N]``.
 """
@@ -49,11 +59,19 @@ from repro.serving.engine import greedy_decode, prefill
 from repro.serving.scheduler import Scheduler
 
 # name, arch, slots, pool_pages, page, max_len, n_requests, seed
+# (pool/page are ignored by the slot-state families — their admission
+# unit is the batch row, not a page)
 SHAPES = [
     ("qwen2_5_3b_s4_r12", "qwen2_5_3b", 4, 96, 16, 256, 12, 0),
+    ("mamba2_370m_s4_r12", "mamba2_370m", 4, None, 16, 256, 12, 1),
+    ("zamba2_7b_s4_r12", "zamba2_7b", 4, None, 16, 256, 12, 2),
+    ("granite_moe_s4_r12", "granite_moe_3b_a800m", 4, 96, 16, 256, 12, 3),
 ]
 SMOKE_SHAPES = [
     ("qwen2_5_3b_s3_r6", "qwen2_5_3b", 3, 30, 4, 64, 6, 0),
+    ("mamba2_370m_s3_r6", "mamba2_370m", 3, None, 4, 64, 6, 1),
+    ("zamba2_7b_s3_r6", "zamba2_7b", 3, None, 4, 64, 6, 2),
+    ("granite_moe_s3_r6", "granite_moe_3b_a800m", 3, 30, 4, 64, 6, 3),
 ]
 
 
@@ -76,20 +94,49 @@ def _trace(rng, n_requests, max_len):
     return reqs
 
 
+def _pct(samples, q):
+    return (round(float(np.percentile(np.asarray(samples) * 1e3, q)), 3)
+            if samples else None)
+
+
+def _latency_stats(sched, durations):
+    """TTFT + per-token latency percentiles from the scheduler's request
+    event log: TTFT spans the ticks from submission through the tick
+    that produced the first (prefill) token; each later token costs its
+    own tick's wall time."""
+    ttft, tok = [], []
+    for log in sched.request_log.values():
+        tt = log.get("token_ticks")
+        if not tt:
+            continue
+        ttft.append(sum(durations[log["submitted"]:tt[0] + 1]))
+        tok.extend(durations[t] for t in tt[1:])
+    return {"ttft_p50_ms": _pct(ttft, 50), "ttft_p95_ms": _pct(ttft, 95),
+            "tok_p50_ms": _pct(tok, 50), "tok_p95_ms": _pct(tok, 95)}
+
+
 def _run_continuous(params, cfg, reqs, *, slots, pool, page, max_len,
                     kv_quant="none", mesh=None):
+    if cfg.family in ("ssm", "hybrid"):
+        # slot-state families: the dense layout, no page pool to size
+        config = CacheConfig()
+    else:
+        config = CacheConfig(layout="paged", alloc="dynamic",
+                             page_size=page, pool_pages=pool,
+                             kv_quant=kv_quant, mesh=mesh)
     sched = Scheduler(params, cfg, slots=slots, max_len=max_len, bucket=8,
-                      config=CacheConfig(layout="paged", alloc="dynamic",
-                                         page_size=page, pool_pages=pool,
-                                         kv_quant=kv_quant, mesh=mesh))
+                      config=config)
     pending = sorted(reqs, key=lambda r: r[0])
     t0 = time.perf_counter()
     tick = 0
+    durations = []
     while pending or sched.queue or sched.n_active:
         while pending and pending[0][0] <= tick:
             _, prompt, budget = pending.pop(0)
             sched.submit(prompt, budget)
+        t1 = time.perf_counter()
         sched.step()
+        durations.append(time.perf_counter() - t1)
         tick += 1
     sec = time.perf_counter() - t0
     n_tokens = sum(len(v) for v in sched.finished.values())
@@ -99,7 +146,9 @@ def _run_continuous(params, cfg, reqs, *, slots, pool, page, max_len,
             "pages_peak": int(occ.max()), "pages_mean": float(occ.mean()),
             "pool": sched.pool_occupancy().total,
             "shard_peaks": [int(p) for p in shard_occ.max(axis=0)],
-            "page_bytes": page_nbytes(sched.cache)}
+            "page_bytes": (page_nbytes(sched.cache)
+                           if "k_pages" in sched.cache else None),
+            **_latency_stats(sched, durations)}
 
 
 def _run_static(params, cfg, reqs, *, slots, page, max_len):
@@ -146,21 +195,25 @@ def bench_one(name, arch, slots, pool, page, max_len, n_requests, seed,
     cfg = get_smoke_config(arch).replace(quant_proj="none", dtype="float32")
     params = init_model(jax.random.PRNGKey(0), cfg)
     reqs = _trace(np.random.default_rng(seed), n_requests, max_len)
+    paged_family = cfg.family not in ("ssm", "hybrid")
     runs = [
         ("continuous", _run_continuous(params, cfg, reqs, slots=slots,
                                        pool=pool, page=page,
                                        max_len=max_len)),
-        ("continuous-int8kv", _run_continuous(
-            params, cfg, reqs, slots=slots, pool=pool, page=page,
-            max_len=max_len, kv_quant="int8")),
     ]
-    if mesh_size > 1:
-        from repro.launch.mesh import make_serving_mesh
-        runs.append((f"continuous-mesh{mesh_size}", _run_continuous(
+    if paged_family:
+        # int8 pages and mesh-partitioned pools only exist for paged KV
+        runs.append(("continuous-int8kv", _run_continuous(
             params, cfg, reqs, slots=slots, pool=pool, page=page,
-            max_len=max_len, mesh=make_serving_mesh(mesh_size))))
-    runs.append(("static", _run_static(params, cfg, reqs, slots=slots,
-                                       page=page, max_len=max_len)))
+            max_len=max_len, kv_quant="int8")))
+        if mesh_size > 1:
+            from repro.launch.mesh import make_serving_mesh
+            runs.append((f"continuous-mesh{mesh_size}", _run_continuous(
+                params, cfg, reqs, slots=slots, pool=pool, page=page,
+                max_len=max_len, mesh=make_serving_mesh(mesh_size))))
+    if paged_family:
+        runs.append(("static", _run_static(params, cfg, reqs, slots=slots,
+                                           page=page, max_len=max_len)))
     rows = []
     for scheme, res in runs:
         rows.append({
@@ -174,6 +227,10 @@ def bench_one(name, arch, slots, pool, page, max_len, n_requests, seed,
             "occupancy_frac": round(res["pages_mean"] / res["pool"], 3),
             "shard_peaks": res["shard_peaks"],
             "page_bytes": res["page_bytes"],
+            "ttft_p50_ms": res.get("ttft_p50_ms"),
+            "ttft_p95_ms": res.get("ttft_p95_ms"),
+            "tok_p50_ms": res.get("tok_p50_ms"),
+            "tok_p95_ms": res.get("tok_p95_ms"),
         })
     return rows
 

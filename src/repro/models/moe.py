@@ -59,8 +59,11 @@ def _capacity(cfg: ModelConfig, s: int) -> int:
     c = max(8, -(-c // 8) * 8)             # round up to 8 for TPU lanes
     # a sequence of S tokens contributes at most S slots per expert —
     # without this bound a decode step (S=1) would pad 8 slots/expert,
-    # a 128x compute overhead at 128 experts
-    return min(c, s)
+    # a 128x compute overhead at 128 experts.  But never below top_k: a
+    # single decode token routes to top_k *distinct* experts (one slot
+    # each), and at S < top_k the averaged-capacity formula can round
+    # below that and silently drop routed copies of live tokens.
+    return min(c, max(s, cfg.top_k))
 
 
 def _dispatch_compute(x, gates, idx, w, cfg: ModelConfig, *,

@@ -72,6 +72,29 @@ def _causal_conv(x: jax.Array, w: jax.Array,
     return y.astype(x.dtype), None
 
 
+def _conv_prefill(x: jax.Array, w: jax.Array, prev: jax.Array,
+                  n_valid: jax.Array):
+    """Depthwise causal conv over a prefill chunk with carried tail state.
+
+    x (B, L, C); w (k, C); prev (B, k-1, C) — the window tail just before
+    this chunk (zeros for a fresh sequence, the previous chunk's tail
+    under chunked prefill).  Returns (y (B, L, C), new_tail (B, k-1, C))
+    where ``new_tail`` is the window ending at each row's ``n_valid``
+    (B,) committed tokens: absolute position ``t`` sits at padded index
+    ``t + (k-1)``, so the tail reads indices ``[n_valid, n_valid+k-1)``
+    — always valid tokens or the carried-in tail, never right-padding
+    garbage (a row with ``n_valid == 0`` keeps its tail unchanged).
+    """
+    k = w.shape[0]
+    l_len = x.shape[1]
+    xp = jnp.concatenate([prev.astype(jnp.float32),
+                          x.astype(jnp.float32)], axis=1)   # (B, L+k-1, C)
+    y = sum(xp[:, i:i + l_len] * w[i] for i in range(k))
+    idx = n_valid[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :]
+    new_tail = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    return y.astype(x.dtype), new_tail
+
+
 def _segsum(a: jax.Array) -> jax.Array:
     """a (..., cs) → (..., cs, cs): sum over (j, i], -inf above diagonal."""
     cs = a.shape[-1]
@@ -141,11 +164,48 @@ def ssd_chunked(x: jax.Array, a_dt: jax.Array, b_mat: jax.Array,
     return y, final_state
 
 
+def ssm_step(h_prev: jax.Array, x_dt: jax.Array, da: jax.Array,
+             b_row: jax.Array, c_row: jax.Array):
+    """One token of the SSD recurrence: ``h, y = ssm_step(h, x)``.
+
+    h_prev (B,H,P,N) f32; x_dt (B,H,P) dt-premultiplied input; da (B,H)
+    per-head decay ``exp(dt*A)``; b_row / c_row (B,N) the token's conv'd
+    B/C projections.  Returns (h_new (B,H,P,N) f32, y (B,H,P) f32).
+    This is the O(1) decode step ``transformer._scan_ssm`` scans through
+    the layer stack; the einsum strings match ``ssd_chunked``'s state
+    update so single-step decode and chunked prefill advance the same
+    recurrence.
+    """
+    xb = jnp.einsum("bhp,bn->bhpn", x_dt.astype(jnp.float32),
+                    b_row.astype(jnp.float32))
+    h_new = h_prev * da[..., None, None] + xb
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_row.astype(jnp.float32))
+    return h_new, y
+
+
 def apply_mamba2(params: Params, x: jax.Array, cfg: ModelConfig, *,
-                 state: dict | None = None):
-    """Mamba2 block.  Training/prefill: state=None.  Decode: state is
-    {"h": (B,H,P,N) f32, "conv_x": (B,k-1,di), "conv_B": …, "conv_C": …};
-    x is (B, 1, D).  Returns (y, new_state_or_None).
+                 state: dict | None = None,
+                 n_valid: jax.Array | None = None):
+    """Mamba2 block.  Three modes:
+
+    * **training** — ``state=None``: chunked SSD scan, no carried state.
+    * **decode** — ``state`` given, x (B, 1, D): single-token recurrence
+      (``ssm_step``) + conv-window ring-buffer update.  ``state`` is
+      {"h": (B,H,P,N) f32, "conv_x": (B,k-1,di), "conv_B": …, "conv_C": …}.
+    * **prefill-commit** — ``state`` given and L > 1 (or ``n_valid``
+      passed): the chunk runs through ``ssd_chunked`` *from*
+      ``state["h"]`` and the returned state has advanced by each row's
+      ``n_valid`` (B,) committed tokens.  ``dt`` is zeroed at padded
+      positions after the softplus, so a padded step decays the state by
+      exactly ``exp(0)=1`` and contributes exactly ``0`` — right-padding
+      is mathematically invisible to the recurrence — and the conv tails
+      advance to each row's last valid token (``_conv_prefill``).  The
+      scan always uses the fixed ``cfg.ssm_chunk`` (L padded up to a
+      multiple), never ``min(chunk, L)``: a width-dependent chunk would
+      regroup the inter-chunk summation and break parity across padded
+      prompt widths.
+
+    Returns (y, new_state_or_None).
     """
     bsz, l, _ = x.shape
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
@@ -158,36 +218,58 @@ def apply_mamba2(params: Params, x: jax.Array, cfg: ModelConfig, *,
     cm = apply_linear(params["in_C"], x, mode=mode)
     dt = apply_linear(params["in_dt"], x, mode=mode)
 
-    decode = state is not None
-    xs, conv_x = _causal_conv(xs, params["conv_x"]["w"],
-                              state["conv_x"] if decode else None)
-    bm, conv_b = _causal_conv(bm, params["conv_B"]["w"],
-                              state["conv_B"] if decode else None)
-    cm, conv_c = _causal_conv(cm, params["conv_C"]["w"],
-                              state["conv_C"] if decode else None)
+    decode = state is not None and l == 1 and n_valid is None
+    commit = state is not None and not decode
+    if commit:
+        nv = (jnp.full((bsz,), l, jnp.int32) if n_valid is None
+              else jnp.asarray(n_valid, jnp.int32))
+        xs, conv_x = _conv_prefill(xs, params["conv_x"]["w"],
+                                   state["conv_x"], nv)
+        bm, conv_b = _conv_prefill(bm, params["conv_B"]["w"],
+                                   state["conv_B"], nv)
+        cm, conv_c = _conv_prefill(cm, params["conv_C"]["w"],
+                                   state["conv_C"], nv)
+    else:
+        xs, conv_x = _causal_conv(xs, params["conv_x"]["w"],
+                                  state["conv_x"] if decode else None)
+        bm, conv_b = _causal_conv(bm, params["conv_B"]["w"],
+                                  state["conv_B"] if decode else None)
+        cm, conv_c = _causal_conv(cm, params["conv_C"]["w"],
+                                  state["conv_C"] if decode else None)
     xs, bm, cm = jax.nn.silu(xs), jax.nn.silu(bm), jax.nn.silu(cm)
     xs = shard(xs, "batch", None, "ssm_inner")
 
     a = -jnp.exp(params["ssm"]["A_log"])                       # (H,) negative
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + params["ssm"]["dt_bias"])           # (B,L,H)
+    if commit:
+        # padded steps: decay exp(dt·A)=1, contribution x·dt = 0
+        dt = jnp.where(jnp.arange(l)[None, :, None] < nv[:, None, None],
+                       dt, 0.0)
     x_hd = xs.reshape(bsz, l, h, p)
     x_dt = x_hd * dt[..., None].astype(x_hd.dtype)
 
-    if not decode:
+    if state is None:
         y, final = ssd_chunked(x_dt, dt * a, bm, cm,
                                min(cfg.ssm_chunk, l))
         new_state = {"h": final, "conv_x": None, "conv_B": None,
                      "conv_C": None}
+    elif commit:
+        pad = -l % cfg.ssm_chunk
+        seq_pad = ((0, 0), (0, pad))
+        y, final = ssd_chunked(
+            jnp.pad(x_dt, seq_pad + ((0, 0), (0, 0))),
+            jnp.pad(dt * a, seq_pad + ((0, 0),)),
+            jnp.pad(bm, seq_pad + ((0, 0),)),
+            jnp.pad(cm, seq_pad + ((0, 0),)),
+            cfg.ssm_chunk, init_state=state["h"])
+        y = y[:, :l]
+        new_state = {"h": final, "conv_x": conv_x, "conv_B": conv_b,
+                     "conv_C": conv_c}
     else:
-        h_prev = state["h"]                                    # (B,H,P,N)
         da = jnp.exp(dt[:, 0, :] * a)                          # (B,H)
-        xb = jnp.einsum("bhp,bn->bhpn", x_dt[:, 0].astype(jnp.float32),
-                        bm[:, 0].astype(jnp.float32))
-        h_new = h_prev * da[..., None, None] + xb
-        y = jnp.einsum("bhpn,bn->bhp", h_new,
-                       cm[:, 0].astype(jnp.float32))[:, None]
-        y = y.astype(x_hd.dtype).reshape(bsz, 1, h, p)
+        h_new, y = ssm_step(state["h"], x_dt[:, 0], da, bm[:, 0], cm[:, 0])
+        y = y[:, None].astype(x_hd.dtype).reshape(bsz, 1, h, p)
         new_state = {"h": h_new, "conv_x": conv_x, "conv_B": conv_b,
                      "conv_C": conv_c}
 
@@ -202,4 +284,4 @@ def apply_mamba2(params: Params, x: jax.Array, cfg: ModelConfig, *,
     g = (gf * rms * params["norm"]["w"]).astype(x.dtype)
 
     y = apply_linear(params["out_proj"], g, mode=mode)
-    return y, (new_state if decode else None)
+    return y, (new_state if state is not None else None)

@@ -17,7 +17,8 @@ Cache convention (decode) — see serving/cache.py + docs/DESIGN.md:
           {"k_scales","v_scales"}: (L, P, page, KVH) f32 (kv_quant="int8"),
           {"page_table"}: (B, max_pages) int32, {"seq_lens"}: (B,) int32
   {"shared_k","shared_v"}: (A, B, S_max, KVH, hd)   zamba2 shared block
-  {"ssm_h"}: (L, B, H, P, N) f32; {"conv_x","conv_B","conv_C"} conv tails
+  {"ssm_h"}: (L, B, H, P, N) f32; {"conv_x","conv_B","conv_C"} conv tails;
+          SSM serving caches also carry {"seq_lens"}: (B,) int32
 """
 from __future__ import annotations
 
@@ -133,9 +134,10 @@ def _decoder_block(p: Params, x, cfg: ModelConfig, *, positions, is_local,
     return x, new_kv, aux
 
 
-def _ssm_block(p: Params, x, cfg: ModelConfig, *, ssm_state):
+def _ssm_block(p: Params, x, cfg: ModelConfig, *, ssm_state, n_valid=None):
     h = apply_norm(p["norm"], x, cfg)
-    y, new_state = apply_mamba2(p["mamba"], h, cfg, state=ssm_state)
+    y, new_state = apply_mamba2(p["mamba"], h, cfg, state=ssm_state,
+                                n_valid=n_valid)
     y = shard(y, "batch", "act_seq", None)
     return x + cfg.residual_multiplier * y.astype(x.dtype), new_state
 
@@ -201,9 +203,12 @@ def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
     return x, aux_sum, new_cache
 
 
-def _scan_ssm(params, x, cfg: ModelConfig, *, cache, shared_ctx):
+def _scan_ssm(params, x, cfg: ModelConfig, *, cache, shared_ctx,
+              n_valid=None):
     """SSM / hybrid stack.  ``shared_ctx`` (hybrid only): dict with
-    positions, cache_pos, shared attn caches."""
+    positions, cache_pos, shared attn caches.  With a cache and S > 1 the
+    blocks run in prefill-commit mode (state advanced by each row's
+    ``n_valid`` committed tokens — see ``apply_mamba2``)."""
     decode = cache is not None
     every = cfg.shared_attn_every
     hybrid = cfg.family == "hybrid" and every > 0
@@ -251,7 +256,8 @@ def _scan_ssm(params, x, cfg: ModelConfig, *, cache, shared_ctx):
             lp, flag, app_i = xs
             state = None
         x, caches = maybe_shared_attn(x, flag, app_i, caches)
-        x, new_state = _ssm_block(lp, x, cfg, ssm_state=state)
+        x, new_state = _ssm_block(lp, x, cfg, ssm_state=state,
+                                  n_valid=n_valid)
         x = shard(x, "batch", "act_seq", None)
         ys = ((new_state["h"], new_state["conv_x"], new_state["conv_B"],
                new_state["conv_C"]) if decode else None)
@@ -273,8 +279,12 @@ def _scan_ssm(params, x, cfg: ModelConfig, *, cache, shared_ctx):
     (x, caches), ys = jax.lax.scan(body, (x, carry_caches), xs)
     new_cache = None
     if decode:
-        new_cache = {"ssm_h": ys[0], "conv_x": ys[1], "conv_B": ys[2],
-                     "conv_C": ys[3]}
+        ssm_keys = ("ssm_h", "conv_x", "conv_B", "conv_C")
+        # layer-independent state (seq_lens, …) rides along untouched, as
+        # in _scan_decoder; seq_lens is stamped by apply_model
+        new_cache = {k: v for k, v in cache.items()
+                     if k not in ssm_keys + ("shared_k", "shared_v")}
+        new_cache.update(zip(ssm_keys, ys))
         if hybrid:
             new_cache["shared_k"], new_cache["shared_v"] = caches
     return x, new_cache
@@ -289,7 +299,8 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
                 cache_pos: jax.Array | None = None,
                 frontend_embeds: jax.Array | None = None,
                 encoder_frames: jax.Array | None = None,
-                memory: jax.Array | None = None):
+                memory: jax.Array | None = None,
+                n_valid: jax.Array | None = None):
     """Returns (logits, new_cache, aux).
 
     tokens: (B, S) int32 decoder/text tokens.
@@ -298,8 +309,11 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     memory: (B, T, D) precomputed encoder output (decode steps).
     cache/cache_pos: decode state (see ``serving/cache.py`` layouts).
     ``cache_pos`` is a scalar (batch-synchronous) or (B,) int32 vector of
-    per-sequence write positions; with a paged cache a scalar is
-    broadcast.  The paged new_cache carries ``seq_lens = cache_pos + S``.
+    per-sequence write positions; with a paged or SSM cache a scalar is
+    broadcast.  ``n_valid`` (B,) int32 (SSM/hybrid prefill only) marks how
+    many of the S tokens each row actually commits — padded positions
+    beyond it leave the recurrent state untouched.  The paged/SSM
+    new_cache carries ``seq_lens = cache_pos + committed``.
     """
     x = embed_tokens(params["embed"], tokens, cfg)
     if frontend_embeds is not None and cache is None:
@@ -309,8 +323,10 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     x = shard(x, "batch", "seq" if b == 1 else None, None)
 
     paged = cache is not None and "k_pages" in cache
-    if paged and (cache_pos is None or jnp.ndim(cache_pos) == 0):
-        # paged writes scatter per sequence — normalize to (B,) positions
+    ssm_cache = cache is not None and "ssm_h" in cache
+    if (paged or ssm_cache) and (cache_pos is None
+                                 or jnp.ndim(cache_pos) == 0):
+        # paged/SSM serving is per-sequence — normalize to (B,) positions
         cache_pos = jnp.full((b,), 0 if cache_pos is None else cache_pos,
                              jnp.int32)
     if positions is None:
@@ -333,7 +349,10 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     if cfg.family in ("ssm", "hybrid"):
         shared_ctx = {"positions": positions, "cache_pos": cache_pos}
         x, new_cache = _scan_ssm(params, x, cfg, cache=cache,
-                                 shared_ctx=shared_ctx)
+                                 shared_ctx=shared_ctx, n_valid=n_valid)
+        if cache is not None and "seq_lens" in cache:
+            new_cache["seq_lens"] = cache_pos + (s if n_valid is None
+                                                 else n_valid)
     else:
         x, lb, new_cache = _scan_decoder(
             params, x, cfg, positions=positions, causal=True,

@@ -9,6 +9,9 @@ Two attention-cache layouts behind one ``init_cache`` API (see
                     shared_k/v (A, B, S_max, KVH, hd) for the A application
                     sites of the parameter-shared block
   ssm (mamba2):     ssm state + conv tails only — O(1) in context length.
+  Both SSM families also carry seq_lens (B,) int32 — per-slot committed
+  tokens, same currency as the paged layout (serving/state.py keys slot
+  admission and occupancy off it).
 
 **paged** — fixed-size KV pages in a shared pool plus per-sequence page
 tables (attention families only; the SSM state is already O(1)):
@@ -268,6 +271,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
             cache["shared_k"] = jnp.zeros(
                 (sites, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)
             cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+        # per-slot committed-token counts: the slot allocator and the
+        # serving engine address SSM state by batch row exactly like the
+        # paged path addresses pages — seq_lens is the shared currency
+        cache["seq_lens"] = jnp.zeros((batch,), jnp.int32)
     elif config.layout == "paged":
         page_sz = config.page_size
         max_pages = ceil_div(max_len, page_sz)
@@ -364,6 +371,7 @@ def cache_logical_axes(cfg: ModelConfig, kv_shard: str = "auto", *,
         axes["conv_x"] = (None, "batch", None, "ssm_inner")
         axes["conv_B"] = (None, "batch", None, None)
         axes["conv_C"] = (None, "batch", None, None)
+        axes["seq_lens"] = ("batch",)
         if n_shared_sites(cfg):
             kv = _kv_axes(cfg, kv_shard, model_size)
             axes["shared_k"] = kv

@@ -96,6 +96,13 @@ def validate_decode_cache(cache: dict, cfg: ModelConfig,
             raise ValueError(
                 f"CacheConfig(kv_quant={config.kv_quant!r}) does not "
                 "match this cache's page pools")
+    if ("ssm_h" in cache) != (cfg.family in ("ssm", "hybrid")):
+        # a family/cache mismatch would not crash — the ssm scan and the
+        # attention scan would each happily trace the wrong state shapes
+        got = "SSM slot state" if "ssm_h" in cache else "attention KV"
+        raise ValueError(
+            f"cache carries {got} but cfg.family is {cfg.family!r} — was "
+            "it built with a different model config?")
     if "k_pages" in cache:
         kd, vd = cache["k_pages"].dtype, cache["v_pages"].dtype
         has_scales = "k_scales" in cache or "v_scales" in cache
@@ -188,12 +195,19 @@ def prefill(params: Params, cache: dict, prompts: jax.Array,
                          f"capacity {capacity} tokens")
     prompt_lens = jnp.asarray(prompt_lens, jnp.int32)
     mesh = config.mesh if config is not None else None
+    # SSM state is a recurrence, not an addressed buffer: padded tails
+    # can't be masked after the fact, so each row's valid-token count
+    # rides into the model and zeroes dt at padded steps (decay 1,
+    # contribution 0 — right-padding invisible to the state)
+    is_ssm = "ssm_h" in cache
     if chunk is None or s_pad <= chunk:
         pos0 = jnp.full((b,), start_pos, jnp.int32)
+        nv = (jnp.clip(prompt_lens - start_pos, 0, s_pad)
+              if is_ssm else None)
         with _mesh_context(mesh):
             logits, cache, _ = apply_model(params, prompts, cfg,
                                            cache=cache, cache_pos=pos0,
-                                           memory=memory)
+                                           memory=memory, n_valid=nv)
         next_logits = jnp.take_along_axis(
             logits, (prompt_lens - 1 - start_pos)[:, None, None],
             axis=1)[:, 0]
@@ -202,10 +216,12 @@ def prefill(params: Params, cache: dict, prompts: jax.Array,
         for c0 in range(0, s_pad, chunk):
             cs = min(chunk, s_pad - c0)
             pos0 = jnp.full((b,), start_pos + c0, jnp.int32)
+            nv = (jnp.clip(prompt_lens - (start_pos + c0), 0, cs)
+                  if is_ssm else None)
             with _mesh_context(mesh):
                 logits, cache, _ = apply_model(
                     params, prompts[:, c0:c0 + cs], cfg, cache=cache,
-                    cache_pos=pos0, memory=memory)
+                    cache_pos=pos0, memory=memory, n_valid=nv)
             if next_logits is None:
                 next_logits = jnp.zeros((b, logits.shape[-1]), logits.dtype)
             # each sequence's last real prompt token lives in exactly one
@@ -244,8 +260,9 @@ def serve_step(params: Params, cache: dict, tokens: jax.Array,
     validate_decode_cache(cache, cfg, config=config)
     if pos is None:
         if "seq_lens" not in cache:
-            raise ValueError("pos=None requires a paged cache carrying "
-                             "seq_lens; dense caches need an explicit pos")
+            raise ValueError("pos=None requires a cache carrying seq_lens "
+                             "(paged or SSM serving caches); plain dense "
+                             "caches need an explicit pos")
         pos = cache["seq_lens"]
     with _mesh_context(config.mesh if config is not None else None):
         logits, new_cache, _ = apply_model(params, tokens, cfg, cache=cache,
@@ -269,7 +286,8 @@ def greedy_decode(params: Params, cache: dict, first_token: jax.Array,
     """
     from_cache_lens = start_pos is None
     if from_cache_lens and "seq_lens" not in cache:
-        raise ValueError("start_pos=None requires a paged cache")
+        raise ValueError("start_pos=None requires a cache carrying "
+                         "seq_lens (paged or SSM serving caches)")
     from repro.kernels.tiled_matmul.ops import kernel_mode
     # the donated-cache scan would otherwise *silently* mis-read an
     # unsupported layout (e.g. int8 pages without scales) — fail here

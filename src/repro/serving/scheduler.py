@@ -1,22 +1,24 @@
-"""Continuous-batching scheduler: admit → step → retire over a page pool.
+"""Continuous-batching scheduler: admit → step → retire over any family.
 
 The static serving loop (``engine.prefill`` → ``engine.greedy_decode``)
-processes one batch to completion: every sequence holds its pages until
+processes one batch to completion: every sequence holds its state until
 the *slowest* one finishes.  Serving-class traffic (requests arriving
 continuously, wildly mixed prompt/output lengths) wants the vLLM-style
-loop instead — and the paged cache + free-list allocator make it a thin
-layer:
+loop instead — and the sequence-state registry (``serving/state.py``)
+makes it one loop for every family: the scheduler speaks only the
+``StateHandler`` contract (capacity / admit / free / fork / advance /
+occupancy), so attention models serve over a paged pool, mamba2 over
+per-row SSM slots, and zamba2 over both, through the *same* code path:
 
-  * **admit** — while a batch slot is free and the allocator can cover
-    ``ceil((prompt + budget) / page)`` pages, pop the next queued
-    request, allocate its pages (``allocator.admit_sequence``), and
-    prefill its prompt into them.  If a live sequence shares a prompt
-    prefix, the prefix's full pages are *aliased* instead of recomputed
+  * **admit** — while a batch slot is free and the handler can claim
+    state for ``prompt + budget`` tokens (pages for ``paged_kv`` —
+    admission waits when the pool can't cover the head-of-queue
+    request; always-admissible slots for the SSM families), pop the
+    next queued request and prefill its prompt.  If a live sequence
+    shares a prompt prefix and the handler supports sharing, the
+    prefix's full pages are *aliased* instead of recomputed
     (``allocator.fork_sequence``: refcounted read-only sharing, eager
-    CoW on the boundary page) and only the suffix is prefilled.  When
-    the pool can't cover the head-of-queue request, admission waits —
-    that is the admission control that keeps a decode step from ever
-    running out of pages mid-flight.
+    CoW on the boundary page) and only the suffix is prefilled.
   * **step** — one decode step for the whole live batch through the
     *same* jitted scan body ``greedy_decode`` uses
     (``engine._greedy_run`` with ``n_steps=1``, cache donated): the
@@ -25,8 +27,9 @@ layer:
     slots ride along masked (their table rows point at the reserved
     scratch page; their lengths are re-zeroed after the step).
   * **retire** — finished sequences (budget exhausted or EOS) release
-    their page references; pages whose refcount drops to zero return to
-    the free list and the next queued request takes them.
+    their state through the handler: page references drop (pages whose
+    refcount reaches zero return to the free list), SSM slots zero
+    their recurrent state.
 
 Prompts are right-padded to a bucket multiple before prefill so the
 number of distinct prefill shapes — and with it the trace count — stays
@@ -49,9 +52,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.serving import allocator as alloc
 from repro.serving.cache import CacheConfig, cache_shardings, init_cache
 from repro.serving.engine import _greedy_run, prefill
+from repro.serving.state import default_serving_config, state_handler
 
 __all__ = ["Request", "Scheduler", "PoolOccupancy"]
 
@@ -87,29 +90,39 @@ class _Slot:
     req: Request
     generated: list
     last_token: int
+    admitted: int = 0
+    # scheduler tick at which each generated token materialized (the
+    # admission tick for the prefill token): benchmarks turn these into
+    # TTFT / per-token latency percentiles via per-tick wall times
+    token_ticks: list = dataclasses.field(default_factory=list)
 
 
 class Scheduler:
-    """Continuous-batching serving loop over a dynamically-allocated
-    paged cache.
+    """Continuous-batching serving loop over any family's decode state
+    (dispatching through the sequence-state registry, ``serving/state``).
 
     Args:
-      params / cfg: the model (any attention-family config).
+      params / cfg: the model — attention, MoE, pure-SSM (mamba2) or
+        hybrid (zamba2); ``cfg.family`` picks the state handler.
       slots: batch width B of the decode step (live-sequence capacity).
-      max_len: per-sequence context bound (page-table width).
-      config: a ``CacheConfig`` with ``layout="paged"``,
-        ``alloc="dynamic"`` — pool geometry (``page_size`` /
-        ``pool_pages``; the pool may be far below ``slots *
-        ceil(max_len/page_size)`` — admission control and prefix sharing
-        are what make oversubscription safe), ``kv_quant`` (int8 pools
-        roughly halve page bytes, so the same pool serves ~2x the tokens
-        per HBM byte; prefix sharing and CoW carry the scale rows), and
-        the ``mesh`` knob: under a mesh the pool is partitioned, the
-        allocator runs per-shard free lists, and every decode tick goes
-        through the shard_map'd partitioned attention.  Default:
-        ``CacheConfig(layout="paged", alloc="dynamic", page_size=16)``
-        (the scheduler's historical 16-token pages, not CacheConfig's
-        64-token serving default).
+      max_len: per-sequence context bound (page-table width; shared-KV
+        S_max for hybrid; SSM slot state is O(1), so for pure SSM this
+        only sizes nothing — capacity is unbounded).
+      config: a ``CacheConfig``.  Attention families need
+        ``layout="paged"``, ``alloc="dynamic"`` — pool geometry
+        (``page_size`` / ``pool_pages``; the pool may be far below
+        ``slots * ceil(max_len/page_size)`` — admission control and
+        prefix sharing are what make oversubscription safe),
+        ``kv_quant`` (int8 pools roughly halve page bytes, so the same
+        pool serves ~2x the tokens per HBM byte; prefix sharing and CoW
+        carry the scale rows), and the ``mesh`` knob: under a mesh the
+        pool is partitioned, the allocator runs per-shard free lists,
+        and every decode tick goes through the shard_map'd partitioned
+        attention.  SSM families use the dense layout (their state is
+        per-slot, not paged).  Default: the family's
+        ``default_serving_config`` — dynamic 16-token pages for
+        attention (the scheduler's historical pages, not CacheConfig's
+        64-token serving default), plain dense for SSM/hybrid.
       prefill_chunk: commit prompts in fixed-size chunks through the
         paged flash path (None = one pass; right below ~1k prompts).
       share_prefix: alias common prompt-prefix pages between live
@@ -148,13 +161,9 @@ class Scheduler:
                                  pool_pages=pool_pages,
                                  kv_quant=kv_quant or "none")
         if config is None:
-            config = CacheConfig(layout="paged", alloc="dynamic",
-                                 page_size=16)
-        if config.layout != "paged" or config.alloc != "dynamic":
-            raise ValueError(
-                "Scheduler needs CacheConfig(layout='paged', "
-                f"alloc='dynamic'); got layout={config.layout!r}, "
-                f"alloc={config.alloc!r}")
+            config = default_serving_config(cfg)
+        self.handler = state_handler(cfg, config)
+        self.handler.require_scheduler_config()
         self.params, self.cfg, self.config = params, cfg, config
         self.page_size, self.bucket = config.page_size, bucket
         self.prefill_chunk, self.share_prefix = prefill_chunk, share_prefix
@@ -170,6 +179,10 @@ class Scheduler:
         self.slots: list[_Slot | None] = [None] * slots
         self.queue: deque[Request] = deque()
         self.finished: dict[int, np.ndarray] = {}
+        # per-request event ticks (submitted / admitted / token_ticks),
+        # kept after retirement — the latency-percentile benchmarks join
+        # these against per-tick wall times
+        self.request_log: dict[int, dict] = {}
         self.occupancy_log: list[int] = []
         self.shard_occupancy_log: list[tuple[int, ...]] = []
         self._next_rid = 0
@@ -183,25 +196,38 @@ class Scheduler:
         per-sequence table, which would otherwise wedge the queue head."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size >= 1 and max_new_tokens >= 1
-        width = self.cache["page_table"].shape[1]
-        need = -(-(prompt.size + max_new_tokens) // self.page_size)
-        if need > width:
-            raise ValueError(
-                f"request needs {need} pages (prompt {prompt.size} + budget "
-                f"{max_new_tokens} tokens) but the table holds {width} "
-                f"(max_len {width * self.page_size})")
+        if "page_table" in self.cache:
+            width = self.cache["page_table"].shape[1]
+            need = -(-(prompt.size + max_new_tokens) // self.page_size)
+            if need > width:
+                raise ValueError(
+                    f"request needs {need} pages (prompt {prompt.size} + "
+                    f"budget {max_new_tokens} tokens) but the table holds "
+                    f"{width} (max_len {width * self.page_size})")
+        else:
+            # slot families: pure-SSM state has no positional bound
+            # (capacity None); hybrid is bounded by the shared-KV S_max
+            cap = self.handler.capacity(self.cache)
+            if cap is not None and prompt.size + max_new_tokens > cap:
+                raise ValueError(
+                    f"request needs {prompt.size + max_new_tokens} tokens "
+                    f"(prompt {prompt.size} + budget {max_new_tokens}) but "
+                    f"the cache capacity is {cap} tokens")
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
         self.queue.append(Request(rid, prompt, max_new_tokens))
+        self.request_log[rid] = {"submitted": self._ticks}
         return rid
 
     # -- introspection -----------------------------------------------------
     def pool_occupancy(self) -> PoolOccupancy:
-        """Global *and* per-shard pool usage right now (``PoolOccupancy``;
-        indexes [0]/[1] stay (used, total) for tuple-shaped callers)."""
-        used, total = alloc.pool_occupancy(self.cache)
-        return PoolOccupancy(used, total, alloc.shard_occupancy(self.cache))
+        """Global *and* per-shard usage right now (``PoolOccupancy``;
+        indexes [0]/[1] stay (used, total) for tuple-shaped callers).
+        Units are the handler's allocation grain: pages for attention
+        families, busy batch slots for the SSM families."""
+        used, total, per_shard = self.handler.occupancy(self.cache)
+        return PoolOccupancy(used, total, per_shard)
 
     @property
     def n_active(self) -> int:
@@ -245,9 +271,11 @@ class Scheduler:
         done = []
         for b, slot in enumerate(self.slots):
             if slot is not None and self._finished(slot):
-                self.cache = alloc.free_sequence(self.cache, b)
+                self.cache = self.handler.free(self.cache, b)
                 self.finished[slot.req.rid] = np.asarray(slot.generated,
                                                          np.int32)
+                self.request_log[slot.req.rid].update(
+                    admitted=slot.admitted, token_ticks=slot.token_ticks)
                 done.append(slot.req.rid)
                 self.slots[b] = None
         return done
@@ -282,13 +310,13 @@ class Scheduler:
             req = self.queue[0]
             budget = int(req.prompt.size) + req.max_new_tokens
             parent, shared = (-1, 0)
-            if self.share_prefix:
+            if self.share_prefix and self.handler.supports_prefix_sharing:
                 parent, shared = self._prefix_match(req.prompt)
             if shared > 0:
-                self.cache, ok = alloc.fork_sequence(
+                self.cache, ok = self.handler.fork(
                     self.cache, parent, b, shared, budget)
             else:
-                self.cache, ok = alloc.admit_sequence(self.cache, b, budget)
+                self.cache, ok = self.handler.admit(self.cache, b, budget)
             if not bool(ok):
                 if self.n_active == 0:
                     raise RuntimeError(
@@ -297,7 +325,9 @@ class Scheduler:
                 return                       # pool full: wait for retires
             self.queue.popleft()
             first = self._prefill_slot(b, req.prompt, start=shared)
-            self.slots[b] = _Slot(req, [first], first)
+            self.slots[b] = _Slot(req, [first], first,
+                                  admitted=self._ticks,
+                                  token_ticks=[self._ticks])
 
     def _prefill_slot(self, b: int, prompt: np.ndarray, start: int) -> int:
         """Commit ``prompt[start:]`` into row ``b``'s pages (positions
@@ -305,20 +335,13 @@ class Scheduler:
         suffix = prompt[start:]
         pad = -suffix.size % self.bucket
         padded = np.pad(suffix, (0, pad))
-        view = dict(self.cache)
-        view["page_table"] = self.cache["page_table"][b:b + 1]
-        view["seq_lens"] = self.cache["seq_lens"][b:b + 1]
+        view = self.handler.slot_view(self.cache, b)
         nl, view = prefill(
             self.params, view, jnp.asarray(padded[None]),
             jnp.asarray([prompt.size], jnp.int32), self.cfg,
             chunk=self.prefill_chunk, start_pos=start,
             config=self.config)
-        from repro.serving.cache import PAGE_STATE_KEYS
-        for key in PAGE_STATE_KEYS:
-            if key in view:
-                self.cache[key] = view[key]
-        self.cache["seq_lens"] = self.cache["seq_lens"].at[b].set(
-            view["seq_lens"][0])
+        self.cache = self.handler.merge_slot(self.cache, view, b)
         self._pin_shardings()
         return int(jnp.argmax(nl[0]))
 
@@ -352,11 +375,12 @@ class Scheduler:
             self.params, self.cache, tok, jnp.asarray(0, jnp.int32), None,
             self.cfg, 1, True, kernel_mode(), self.config.mesh)
         nxt = np.asarray(toks)[0, :, 0]
-        # idle rows advanced their (zero) lengths and wrote garbage to the
-        # scratch page; re-pin them so their walk never grows
-        self.cache["seq_lens"] = jnp.where(
-            jnp.asarray(active), self.cache["seq_lens"], 0)
+        # idle rows advanced their (zero) lengths and wrote garbage to
+        # their scratch targets; the handler re-pins them so an idle
+        # row's masked walk never grows
+        self.cache = self.handler.advance(self.cache, active)
         for b, slot in enumerate(self.slots):
             if slot is not None and not self._finished(slot):
                 slot.last_token = int(nxt[b])
                 slot.generated.append(slot.last_token)
+                slot.token_ticks.append(self._ticks)

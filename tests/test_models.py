@@ -90,3 +90,37 @@ def test_quantized_forward_close_to_master():
     agree = float(jnp.mean((jnp.argmax(ref_probs, -1)
                             == jnp.argmax(q_probs, -1)).astype(jnp.float32)))
     assert agree > 0.9, agree
+
+
+def test_moe_single_token_matches_dense_experts():
+    """Decode-step regression: at S=1 the capacity formula must hold all
+    top_k routed copies (capacity >= top_k), so ``apply_moe`` equals the
+    dense reference y = sum_i gate_i * FFN_{e_i}(x) with no silent
+    capacity drops."""
+    from repro.models.ffn import _ACT
+    from repro.models.moe import _capacity, apply_moe, init_moe
+    cfg = get_smoke_config("granite_moe_3b_a800m").replace(dtype="float32")
+    assert _capacity(cfg, s=1) >= cfg.top_k
+    moe = init_moe(jax.random.PRNGKey(9), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(10), (4, 1, cfg.d_model),
+                          jnp.float32)
+    y, _ = apply_moe(moe, x, cfg)
+
+    # dense-expert reference: route on the same logits, run every selected
+    # expert as a plain FFN, combine with the (renormalized) gates
+    logits = jnp.einsum("bsd,de->bse", x, moe["router"]["w"])
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
+    if cfg.router_norm_topk:
+        gates = gates / jnp.sum(gates, -1, keepdims=True)
+    act = _ACT[cfg.ffn_type]
+    w = moe["experts"]
+    ref = jnp.zeros_like(x)
+    for b in range(x.shape[0]):
+        for j in range(cfg.top_k):
+            e = int(idx[b, 0, j])
+            h = (act(x[b, 0] @ w["gate"][e]) * (x[b, 0] @ w["up"][e]))
+            ref = ref.at[b, 0].add(gates[b, 0, j] * (h @ w["down"][e]))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # and the guard is live: a token's copies never exceed its capacity
+    assert _capacity(cfg, s=1) <= max(8, cfg.top_k)

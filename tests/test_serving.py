@@ -495,6 +495,151 @@ def test_scheduler_rejects_impossible_request():
     assert not sched.queue
 
 
+# ---------------------------------------------------------------------------
+# sequence-state registry: SSM / hybrid / MoE families through one loop
+# ---------------------------------------------------------------------------
+def test_ssm_prefill_matches_stepwise():
+    """Batched padded prefill-commit advances the SSM recurrence exactly
+    like feeding the prompt token by token (the decode recurrence is the
+    ground truth), and right-padding is invisible: mixed-length rows in
+    one padded batch continue bitwise like isolated exact-width runs."""
+    from repro.serving.engine import serve_step
+    cfg = get_smoke_config("mamba2_370m").replace(dtype="float32")
+    params = init_model(KEY, cfg)
+    rng = np.random.default_rng(7)
+    lens = [7, 13, 4]
+    b, s_pad = len(lens), 16
+    prompts = np.zeros((b, s_pad), np.int32)
+    for i, n in enumerate(lens):
+        prompts[i, :n] = rng.integers(3, cfg.vocab_size, n)
+
+    # ground truth per row: batch-1, token-by-token, exact width
+    refs = []
+    for i, n in enumerate(lens):
+        cache = init_cache(cfg, 1, 32, dtype=jnp.float32)
+        for t in range(n):
+            lg, cache = serve_step(params, cache,
+                                   jnp.asarray(prompts[i:i + 1, t:t + 1]),
+                                   jnp.full((1,), t, jnp.int32), cfg)
+        toks = [int(jnp.argmax(lg[0, -1]))]
+        for _ in range(3):
+            lg, cache = serve_step(params, cache,
+                                   jnp.asarray([[toks[-1]]], jnp.int32),
+                                   cache["seq_lens"], cfg)
+            toks.append(int(jnp.argmax(lg[0, -1])))
+        refs.append(toks)
+
+    # one padded batch through prefill-commit, then batched decode
+    for chunk in (None, 8):     # chunked prefill-commit must agree too
+        cache = init_cache(cfg, b, 32, dtype=jnp.float32)
+        nl, cache = prefill(params, cache, jnp.asarray(prompts),
+                            jnp.asarray(lens, np.int32), cfg, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(cache["seq_lens"]), lens)
+        first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
+        out, _ = greedy_decode(params, cache, first, None, 3, cfg)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(refs))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["mamba2_370m", "zamba2_7b",
+                                  "granite_moe_3b_a800m"])
+def test_scheduler_cross_family_matches_isolated(arch):
+    """The acceptance bar of the state registry: a mixed-arrival trace
+    through the *same* admit → step → retire loop produces, per request,
+    exactly the isolated prefill → greedy_decode tokens — for pure SSM
+    (slot state), hybrid (slots + shared KV), and MoE (paged KV with
+    S=1 expert dispatch)."""
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = init_model(KEY, cfg)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(3, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 3, 12)]
+    budgets = [4, 6, 3, 5]
+
+    sched = Scheduler(params, cfg, slots=2, max_len=64, bucket=8,
+                      dtype=jnp.float32)
+    rids = [sched.submit(prompts[0], budgets[0]),
+            sched.submit(prompts[1], budgets[1])]
+    sched.step()                                  # arrivals mid-stream
+    rids.append(sched.submit(prompts[2], budgets[2]))
+    rids.append(sched.submit(prompts[3], budgets[3]))
+    out = sched.run(max_ticks=200)
+
+    for rid, p, m in zip(rids, prompts, budgets):
+        if cfg.family in ("ssm", "hybrid"):
+            config = None
+            cache = init_cache(cfg, 1, max_len=64, dtype=jnp.float32)
+        else:
+            config = CacheConfig(layout="paged", alloc="dynamic",
+                                 page_size=16)
+            cache = init_cache(cfg, 1, max_len=64, dtype=jnp.float32,
+                               config=config)
+            cache, ok = al.admit_sequence(cache, 0, p.size + m)
+            assert bool(ok)
+        padded = np.pad(p, (0, -p.size % 8))     # the scheduler's bucket
+        nl, cache = prefill(params, cache, jnp.asarray(padded[None]),
+                            jnp.asarray([p.size], jnp.int32), cfg,
+                            config=config)
+        first = jnp.argmax(nl, -1)[:, None].astype(jnp.int32)
+        toks, _ = greedy_decode(params, cache, first, None, m - 1, cfg,
+                                config=config)
+        np.testing.assert_array_equal(out[rid], np.asarray(toks)[0])
+    # request event log covers every request with one tick per token
+    for rid, m in zip(rids, budgets):
+        log = sched.request_log[rid]
+        assert log["submitted"] <= log["admitted"]
+        assert len(log["token_ticks"]) == m
+
+
+def test_scheduler_slot_admission_ssm_and_hybrid():
+    """Admission control for slot-state families, through the Scheduler:
+    hybrid capacity is shared_k's S_max (token-worded rejection at
+    submit); pure SSM has no positional bound (huge budgets admit);
+    slot starvation queues requests until a retire frees a row."""
+    cfg = get_smoke_config("zamba2_7b").replace(dtype="float32")
+    params = init_model(KEY, cfg)
+    sched = Scheduler(params, cfg, slots=2, max_len=32, bucket=8,
+                      dtype=jnp.float32)
+    with pytest.raises(ValueError, match="tokens"):
+        sched.submit(np.arange(3, 13, dtype=np.int32), max_new_tokens=40)
+    assert not sched.queue
+
+    # pure SSM: a budget far past any attention cache's S_max is fine
+    mcfg = get_smoke_config("mamba2_370m").replace(dtype="float32")
+    mparams = init_model(KEY, mcfg)
+    msched = Scheduler(mparams, mcfg, slots=2, max_len=32, bucket=8,
+                       dtype=jnp.float32)
+    rng = np.random.default_rng(2)
+    rids = [msched.submit(rng.integers(3, mcfg.vocab_size, 4), 3)
+            for _ in range(3)]
+    msched.step()
+    # starved slots: 2 live, the third queued until someone retires
+    assert msched.n_active == 2 and len(msched.queue) == 1
+    occ = msched.pool_occupancy()
+    assert (occ.used, occ.total) == (2, 2)      # slot units, not pages
+    out = msched.run(max_ticks=60)
+    assert set(out) == set(rids)
+    assert all(len(v) == 3 for v in out.values())
+    assert msched.pool_occupancy().used == 0    # every slot recycled
+
+
+def test_state_handler_free_clears_slot_state():
+    """A retired SSM slot must not leak its recurrence into the next
+    occupant: handler.free zeroes SLOT_STATE_KEYS and the length."""
+    from repro.serving.state import SLOT_STATE_KEYS, state_handler
+    cfg = get_smoke_config("zamba2_7b")
+    cache = init_cache(cfg, 2, max_len=16)
+    handler = state_handler(cfg)
+    cache["ssm_h"] = cache["ssm_h"] + 1.0       # fake a used slot
+    cache["conv_x"] = cache["conv_x"] + 1.0
+    cache["seq_lens"] = jnp.asarray([5, 7], jnp.int32)
+    cache = handler.free(cache, 0)
+    for k in SLOT_STATE_KEYS:
+        assert float(jnp.abs(cache[k][:, 0]).max()) == 0.0
+    assert float(jnp.abs(cache["ssm_h"][:, 1]).min()) == 1.0   # row 1 intact
+    np.testing.assert_array_equal(np.asarray(cache["seq_lens"]), [0, 7])
+
+
 def test_greedy_decode_hits_jit_cache():
     """The scheduler refactor must not cost greedy_decode its jit cache:
     a second identically-shaped call adds no new trace."""

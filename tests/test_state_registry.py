@@ -1,0 +1,151 @@
+"""Sequence-state registry contract tests (``serving/state.py``).
+
+Fast, model-free checks of the per-family handlers: registry selection,
+admit/free/fork semantics on tiny caches, occupancy units, slot-view /
+merge round-trips, and the scheduler-config gate.  The end-to-end story
+(mixed-arrival scheduler traces bitwise-matching isolated serving per
+family) lives in ``tests/test_serving.py``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.serving import allocator as al
+from repro.serving.cache import CacheConfig, init_cache
+from repro.serving.state import (SLOT_STATE_KEYS, HybridHandler,
+                                 PagedKVHandler, SlotStateHandler,
+                                 default_serving_config, state_handler)
+
+PAGED = CacheConfig(layout="paged", alloc="dynamic", page_size=8)
+
+
+def _cfgs():
+    return {a: get_smoke_config(a) for a in
+            ("qwen2_5_3b", "mamba2_370m", "zamba2_7b",
+             "granite_moe_3b_a800m")}
+
+
+def test_registry_selects_by_family():
+    c = _cfgs()
+    assert isinstance(state_handler(c["qwen2_5_3b"]), PagedKVHandler)
+    assert isinstance(state_handler(c["granite_moe_3b_a800m"]),
+                      PagedKVHandler)
+    assert type(state_handler(c["mamba2_370m"])) is SlotStateHandler
+    assert isinstance(state_handler(c["zamba2_7b"]), HybridHandler)
+    # names are the registry's public vocabulary (docs reference them)
+    assert state_handler(c["qwen2_5_3b"]).name == "paged_kv"
+    assert state_handler(c["mamba2_370m"]).name == "ssm_slot"
+    assert state_handler(c["zamba2_7b"]).name == "hybrid"
+
+
+def test_default_serving_config_per_family():
+    c = _cfgs()
+    pc = default_serving_config(c["qwen2_5_3b"])
+    assert (pc.layout, pc.alloc, pc.page_size) == ("paged", "dynamic", 16)
+    sc = default_serving_config(c["mamba2_370m"])
+    assert sc.layout == "dense"
+    assert default_serving_config(c["zamba2_7b"]).layout == "dense"
+
+
+def test_scheduler_config_gate():
+    c = _cfgs()
+    with pytest.raises(ValueError, match="dynamic"):
+        state_handler(c["qwen2_5_3b"],
+                      CacheConfig(layout="paged", alloc="striped")
+                      ).require_scheduler_config()
+    with pytest.raises(ValueError, match="dense"):
+        state_handler(c["mamba2_370m"], CacheConfig(layout="paged")
+                      ).require_scheduler_config()
+    # the valid combos pass silently
+    state_handler(c["qwen2_5_3b"], PAGED).require_scheduler_config()
+    state_handler(c["zamba2_7b"], CacheConfig()).require_scheduler_config()
+
+
+def test_capacity_per_family():
+    c = _cfgs()
+    paged = init_cache(c["qwen2_5_3b"], 2, max_len=32, config=PAGED)
+    assert state_handler(c["qwen2_5_3b"]).capacity(paged) == 32
+    ssm = init_cache(c["mamba2_370m"], 2, max_len=32)
+    assert state_handler(c["mamba2_370m"]).capacity(ssm) is None
+    hyb = init_cache(c["zamba2_7b"], 2, max_len=32)
+    assert state_handler(c["zamba2_7b"]).capacity(hyb) == 32
+
+
+def test_slot_admit_free_and_occupancy():
+    cfg = get_smoke_config("mamba2_370m")
+    h = state_handler(cfg)
+    cache = init_cache(cfg, 3, max_len=16)
+    assert h.occupancy(cache) == (0, 3, ((0, 3),))
+    # dirty a slot, then admit into it: state must be zeroed
+    cache["ssm_h"] = cache["ssm_h"].at[:, 1].set(2.5)
+    cache["seq_lens"] = jnp.asarray([4, 9, 0], jnp.int32)
+    cache, ok = h.admit(cache, 1, n_tokens=10 ** 9)   # no positional bound
+    assert bool(ok)
+    assert float(jnp.abs(cache["ssm_h"][:, 1]).max()) == 0.0
+    np.testing.assert_array_equal(np.asarray(cache["seq_lens"]), [4, 0, 0])
+    assert h.occupancy(cache) == (1, 3, ((1, 3),))
+    cache = h.free(cache, 0)
+    assert h.occupancy(cache)[0] == 0
+    # slot families do not fork: the scheduler falls back to plain admit
+    _, ok = h.fork(cache, 0, 2, 4, 8)
+    assert not ok and not h.supports_prefix_sharing
+
+
+def test_advance_rezeros_idle_rows():
+    cfg = get_smoke_config("mamba2_370m")
+    h = state_handler(cfg)
+    cache = init_cache(cfg, 3, max_len=16)
+    cache["seq_lens"] = jnp.asarray([5, 1, 7], jnp.int32)
+    cache = h.advance(cache, np.asarray([True, False, True]))
+    np.testing.assert_array_equal(np.asarray(cache["seq_lens"]), [5, 0, 7])
+
+
+@pytest.mark.parametrize("arch", ["mamba2_370m", "zamba2_7b"])
+def test_slot_view_merge_roundtrip(arch):
+    """slot_view slices exactly row b; merge_slot folds a mutated view
+    back without touching the other rows."""
+    cfg = get_smoke_config(arch)
+    h = state_handler(cfg)
+    cache = init_cache(cfg, 3, max_len=16)
+    cache["ssm_h"] = cache["ssm_h"].at[:, 2].set(7.0)   # sentinel row
+    view = h.slot_view(cache, 1)
+    assert view["ssm_h"].shape[1] == 1 and view["seq_lens"].shape == (1,)
+    if arch == "zamba2_7b":
+        assert view["shared_k"].shape[1] == 1
+        view["shared_k"] = view["shared_k"] + 1.0
+    view["ssm_h"] = view["ssm_h"] + 3.0
+    view["seq_lens"] = jnp.asarray([6], jnp.int32)
+    cache = h.merge_slot(cache, view, 1)
+    assert float(cache["ssm_h"][:, 1].min()) == 3.0
+    assert float(jnp.abs(cache["ssm_h"][:, 0]).max()) == 0.0
+    assert float(cache["ssm_h"][:, 2].min()) == 7.0     # sentinel intact
+    np.testing.assert_array_equal(np.asarray(cache["seq_lens"]), [0, 6, 0])
+    if arch == "zamba2_7b":
+        assert float(cache["shared_k"][:, 1].min()) == 1.0
+        assert float(jnp.abs(cache["shared_k"][:, 0]).max()) == 0.0
+
+
+def test_paged_handler_delegates_to_allocator():
+    """The paged handler is the allocator with the contract's face on:
+    admit/free/fork move the same refcounts, occupancy reports pages."""
+    cfg = get_smoke_config("qwen2_5_3b")
+    h = state_handler(cfg, PAGED)
+    assert h.supports_prefix_sharing
+    cache = init_cache(cfg, 3, max_len=64,
+                       config=CacheConfig(layout="paged", alloc="dynamic",
+                                          page_size=8, pool_pages=16))
+    cache, ok = h.admit(cache, 0, 24)                   # 3 pages
+    assert bool(ok)
+    used, total, per_shard = h.occupancy(cache)
+    assert (used, total) == al.pool_occupancy(cache) == (4, 16)
+    assert sum(u for u, _ in per_shard) == used
+    cache, ok = h.fork(cache, 0, 1, 16, 32)             # share 2 full pages
+    assert bool(ok)
+    np.testing.assert_array_equal(
+        np.asarray(cache["page_table"][1])[:2],
+        np.asarray(cache["page_table"][0])[:2])
+    cache = h.free(cache, 0)
+    cache = h.free(cache, 1)
+    assert h.occupancy(cache)[0] == 1                   # scratch only

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_ci.json artifacts and gate on serving regressions.
+
+Usage::
+
+    python tools/bench_compare.py BASELINE NEW [--threshold 0.2] [--update]
+
+Reads the ``serving`` section of both artifacts (the continuous-batching
+trace, ``benchmarks/serving.py``), matches rows by ``(shape, scheme)``
+and applies two kinds of checks:
+
+* **exact** — ``decode_steps``, ``pages_peak`` and ``pool_pages`` are
+  deterministic functions of the trace and the scheduler, independent of
+  host speed.  Any drift means the scheduler's admission/retire behavior
+  changed and must be intentional: the gate fails loudly.
+* **throughput** — ``tok_per_s`` is host wall-time and CI machines vary
+  run to run, so raw ratios would be pure noise.  The gate normalizes by
+  the *median* new/old ratio across all matched rows (machine-speed
+  drift moves every row together; a real regression moves one scheme
+  relative to the others) and fails when any row falls below
+  ``(1 - threshold) * median_ratio``.
+
+Rows present in only one artifact are reported and skipped — adding a
+new shape or scheme must not require regenerating history.  Exit status
+is 0 on pass, 1 on any failed check.  ``--update`` copies NEW over
+BASELINE after a passing comparison (refresh the tracked trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import statistics
+import sys
+
+EXACT_COLS = ("decode_steps", "pages_peak", "pool_pages")
+
+
+def _load_serving(path: str) -> dict[tuple[str, str], dict]:
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("serving", [])
+    return {(r["shape"], r["scheme"]): r for r in rows}
+
+
+def compare(base: dict, new: dict, threshold: float) -> list[str]:
+    """Return a list of failure messages (empty = pass); prints a report."""
+    failures: list[str] = []
+    matched = sorted(base.keys() & new.keys())
+    for key in sorted(base.keys() - new.keys()):
+        print(f"  skip (only in baseline): {key[0]}/{key[1]}")
+    for key in sorted(new.keys() - base.keys()):
+        print(f"  skip (new row, no baseline): {key[0]}/{key[1]}")
+    if not matched:
+        print("  no matched serving rows — nothing to gate")
+        return failures
+
+    for key in matched:
+        b, n = base[key], new[key]
+        for col in EXACT_COLS:
+            if b.get(col) != n.get(col):
+                failures.append(
+                    f"{key[0]}/{key[1]}: {col} changed "
+                    f"{b.get(col)} -> {n.get(col)} (must match exactly)")
+
+    ratios = {k: new[k]["tok_per_s"] / base[k]["tok_per_s"]
+              for k in matched if base[k].get("tok_per_s")}
+    if ratios:
+        scale = statistics.median(ratios.values())
+        floor = (1.0 - threshold) * scale
+        print(f"  median tok/s ratio (machine-speed scale): {scale:.3f}; "
+              f"per-row floor: {floor:.3f}")
+        for key, r in sorted(ratios.items()):
+            verdict = "ok" if r >= floor else "REGRESSED"
+            print(f"  {key[0]}/{key[1]}: tok/s ratio {r:.3f} [{verdict}]")
+            if r < floor:
+                failures.append(
+                    f"{key[0]}/{key[1]}: tok/s ratio {r:.3f} below "
+                    f"{floor:.3f} (>{threshold:.0%} drop vs the "
+                    f"median-normalized baseline)")
+    return failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("baseline", help="tracked BENCH_ci.json (old)")
+    p.add_argument("new", help="freshly generated BENCH_ci.json")
+    p.add_argument("--threshold", type=float, default=0.2, metavar="FRAC",
+                   help="allowed per-row tok/s drop below the "
+                        "median-normalized baseline (default 0.2)")
+    p.add_argument("--update", action="store_true",
+                   help="on pass, copy NEW over BASELINE")
+    args = p.parse_args(argv)
+
+    print(f"bench_compare: {args.baseline} vs {args.new} "
+          f"(threshold {args.threshold:.0%})")
+    failures = compare(_load_serving(args.baseline),
+                       _load_serving(args.new), args.threshold)
+    if failures:
+        print("\nFAIL:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("PASS")
+    if args.update:
+        shutil.copy(args.new, args.baseline)
+        print(f"updated {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
