@@ -45,6 +45,17 @@ walks only the pages a sequence actually occupies:
     before the PV product).  Partial q chunks are native: out-of-range
     rows produce row-local garbage that Pallas drops at the
     out-of-range output store.
+  * **n-token verify mode** — an optional third scalar-prefetch operand
+    ``new_lens`` (B,) makes the live new-token count *per sequence*
+    dynamic: row ``r`` of sequence ``b`` sits at position
+    ``ctx - new_lens[b] + r`` and rows ``r >= new_lens[b]`` are fully
+    masked (0 output, the all-masked-row convention).  This is the
+    speculative draft-and-verify step (``serving/engine.py``): the
+    causal compare against per-row positions IS the commit horizon — a
+    drafted token's KV row is visible only to later rows of its own
+    step, never to any committed position, so rejecting it is a pure
+    ``seq_lens`` rewind (``docs/DESIGN.md`` §8).  ``new_lens=None``
+    keeps the exact 2-operand launch (bitwise-identical plain decode).
 
 Grid (n, i, jj): n = B·KH flat KV-head index, i the q block, jj the
 schedule-relative page step, innermost; VMEM scratch carries (acc f32
@@ -164,9 +175,16 @@ def pages_touched(lengths, sched: FlashDecodeSchedule) -> int:
     return total
 
 
-def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, *rest, scale,
-                   window, softcap, sched: FlashDecodeSchedule, kh,
-                   out_dtype, quant: bool):
+def _decode_kernel(pt_ref, len_ref, *rest, scale, window, softcap,
+                   sched: FlashDecodeSchedule, kh, out_dtype, quant: bool,
+                   has_new_lens: bool = False):
+    if has_new_lens:
+        # verify mode: third scalar-prefetch operand — per-sequence live
+        # new-row counts (rows past them are fully masked)
+        nl_ref, rest = rest[0], rest[1:]
+    else:
+        nl_ref = None
+    q_ref, k_ref, v_ref, *rest = rest
     if quant:
         # the int8 layout streams two extra per-page operands: the
         # (1, ps, 1) scale rows riding the same clamped page walk
@@ -210,9 +228,17 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, *rest, scale,
         # rows are the query group laid out (g, qc) flattened: row r is
         # query token i*qc + r % qc at position ctx - q_len + i*qc + r % qc
         row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        q_pos = ctx - sched.q_len + i * qc + row % qc
         k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        allowed = k_pos <= q_pos            # causal + page tail in one
+        if has_new_lens:
+            # verify mode: the live new-row count is dynamic per sequence
+            # (ctx = committed + new_lens[b]); rows at or past it belong
+            # to no token and are masked outright
+            row_idx = i * qc + row % qc
+            q_pos = ctx - nl_ref[b] + row_idx
+            allowed = (k_pos <= q_pos) & (row_idx < nl_ref[b])
+        else:
+            q_pos = ctx - sched.q_len + i * qc + row % qc
+            allowed = k_pos <= q_pos        # causal + page tail in one
         if window is not None:
             allowed &= k_pos > q_pos - window
         s = jnp.where(allowed, s, NEG_INF)
@@ -247,6 +273,7 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
                         q_chunk: int | None = None,
                         k_scales: jax.Array | None = None,
                         v_scales: jax.Array | None = None,
+                        new_lens: jax.Array | None = None,
                         out_dtype=None, interpret: bool = False):
     """Paged flash attention over a page pool.  Shapes:
 
@@ -272,6 +299,15 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
     (``values.astype(f32) * scale``) fused into the kernel body ahead of
     the QK/PV contractions.  The fp pages never materialize in HBM; the
     per-step KV bytes drop to ``1 + 4/D`` per element vs 2 for bf16.
+
+    ``new_lens`` (B,) int32 selects the n-token **verify mode**
+    (speculative decode): row ``r`` of sequence ``b`` is live iff
+    ``r < new_lens[b]`` and sits at position ``lengths[b] - new_lens[b]
+    + r`` (``lengths`` stays committed + live new tokens).  Dead rows
+    come back fully masked (0 output).  The page walk keeps the static
+    ``q_len`` bounds — a conservative superset whose extra pages
+    contribute exact zeros to the online softmax — and ``None`` keeps
+    the 2-operand launch bitwise identical to plain decode.
     """
     b, h, qs, d = q.shape
     p_total, ps, kh, dk = k_pages.shape
@@ -297,16 +333,20 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
     bounds = functools.partial(_page_bounds, q_len=qs, q_chunk=qc,
                                page_size=ps, window=window)
 
-    def q_index(n, i, jj, pt_ref, len_ref):
+    # verify mode streams new_lens as a third scalar-prefetch operand; the
+    # index maps take the scalar refs as trailing varargs so both launch
+    # arities share one definition (page bounds read only the lengths —
+    # the static-q_len superset is exact under masking, see docstring)
+    def q_index(n, i, jj, *_refs):
         return (n // kh, n % kh, 0, i, 0)
 
-    def kv_index(n, i, jj, pt_ref, len_ref):
+    def kv_index(n, i, jj, pt_ref, len_ref, *_refs):
         sb = n // kh
         j_lo, j_hi = bounds(len_ref[sb], i)
         # clamped sparse walk: trailing steps revisit j_hi (copy elided)
         return (pt_ref[sb, jnp.minimum(j_lo + jj, j_hi)], 0, n % kh, 0)
 
-    def scale_index(n, i, jj, pt_ref, len_ref):
+    def scale_index(n, i, jj, pt_ref, len_ref, *_refs):
         # the scale row of exactly the page the KV walk fetches
         sb = n // kh
         j_lo, j_hi = bounds(len_ref[sb], i)
@@ -314,7 +354,8 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, window=window, softcap=softcap,
-        sched=sched, kh=kh, out_dtype=out_dtype, quant=quant)
+        sched=sched, kh=kh, out_dtype=out_dtype, quant=quant,
+        has_new_lens=new_lens is not None)
     in_specs = [
         pl.BlockSpec((1, 1, g, qc, d), q_index),
         pl.BlockSpec((1, ps, 1, d), kv_index),
@@ -325,8 +366,12 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
         in_specs += [pl.BlockSpec((1, ps, 1), scale_index),
                      pl.BlockSpec((1, ps, 1), scale_index)]
         operands += [k_scales, v_scales]
+    scalars = [page_table.astype(jnp.int32), lengths.astype(jnp.int32)]
+    if new_lens is not None:
+        assert new_lens.shape == (b,), (new_lens.shape, b)
+        scalars.append(new_lens.astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(scalars),
         grid=(b * kh, sched.num_q_blocks, sched.max_steps),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, qc, d), q_index),
@@ -340,5 +385,5 @@ def paged_decode_kernel(q: jax.Array, k_pages: jax.Array,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kh, g, qs, d), out_dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
+    )(*scalars, *operands)
     return out.reshape(b, h, qs, d)

@@ -66,6 +66,7 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            q_chunk: int | None = None,
                            k_scales: jax.Array | None = None,
                            v_scales: jax.Array | None = None,
+                           new_lens: jax.Array | None = None,
                            mode: str | None = None) -> jax.Array:
     """Attention over a paged KV cache (always causal).
 
@@ -81,6 +82,12 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     ``kv_quant="int8"`` layout: int8 pools with per-row absmax scales,
     dequantized in-kernel (or inside the gather for the ref oracle) with
     the bitwise-identical ``values.astype(f32) * scale``.
+
+    ``new_lens`` (B,) int32 selects the n-token verify mode
+    (speculative decode — ``docs/DESIGN.md`` §8): per-sequence live
+    new-token counts; rows at or past them are fully masked and
+    ``lengths`` counts committed + live tokens only.  ``None`` is the
+    bitwise-identical plain launch.
 
     Lowers to the paged flash kernel (``decode.py``) under
     ``pallas``/``pallas_interpret`` — a length-aware page walk that
@@ -98,11 +105,11 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
         o = _ref.paged_attention_ref(qh, k_pages, v_pages, page_table,
                                      lengths, scale=scale, window=window,
                                      softcap=softcap, k_scales=k_scales,
-                                     v_scales=v_scales)
+                                     v_scales=v_scales, new_lens=new_lens)
     else:
         o = paged_decode_kernel(qh, k_pages, v_pages, page_table, lengths,
                                 scale=scale, window=window, softcap=softcap,
                                 q_chunk=q_chunk, k_scales=k_scales,
-                                v_scales=v_scales,
+                                v_scales=v_scales, new_lens=new_lens,
                                 interpret=(mode == "pallas_interpret"))
     return o.transpose(0, 2, 1, 3)

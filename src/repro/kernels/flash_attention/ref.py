@@ -84,7 +84,8 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         window: int | None = None,
                         softcap: float | None = None,
                         k_scales: jnp.ndarray | None = None,
-                        v_scales: jnp.ndarray | None = None) -> jnp.ndarray:
+                        v_scales: jnp.ndarray | None = None,
+                        new_lens: jnp.ndarray | None = None) -> jnp.ndarray:
     """Dense decode / chunked-prefill oracle over a paged cache.
 
     q (B, H, q_len, D); pools (P, page, KH, D); lengths (B,) int32 is the
@@ -101,6 +102,11 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     oracle: the int8 pools are gathered and dequantized row-wise
     (``values.astype(f32) * scale``) — the bitwise-specified dequant the
     kernel fuses into its page walk.
+
+    ``new_lens`` (B,) int32 is the verify-mode oracle (speculative
+    decode): row ``r`` of sequence ``b`` is live iff ``r <
+    new_lens[b]`` at position ``lengths[b] - new_lens[b] + r``; dead
+    rows are fully masked (0 output, matching the kernel).
     """
     b, h, qs, d = q.shape
     kh = k_pages.shape[2]
@@ -117,10 +123,15 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                    preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    q_pos = (lengths[:, None] - qs
+    nn = jnp.full_like(lengths, qs) if new_lens is None else new_lens
+    q_pos = (lengths[:, None] - nn[:, None]
              + jnp.arange(qs)[None, :])             # (B, qs)
     k_pos = jnp.arange(t_len)
     mask = k_pos[None, None, :] <= q_pos[:, :, None]        # (B, qs, T)
+    if new_lens is not None:
+        # verify mode: rows past the live new-token count belong to no
+        # token — mask them outright (0-output convention)
+        mask &= (jnp.arange(qs)[None, :, None] < nn[:, None, None])
     if window is not None:
         mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
     mask = mask[:, None, None]                      # (B, 1, 1, qs, T)

@@ -181,7 +181,7 @@ def _attend_blockwise(q, k, v, q_offset, *, scale, cap, causal, window,
 
 
 def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
-                  page_table, is_local, scale, b, s):
+                  page_table, is_local, scale, b, s, n_new=None):
     """Paged-cache decode step: scatter new kv into pages, attend, project.
 
     q (B,S,H,hd), k/v (B,S,K,hd) — already rope'd; cache (k_pages,
@@ -200,6 +200,14 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
     ``attn_impl="jnp"`` (or no Pallas) gathers the pages into a dense
     cache and reuses the jnp decode path (the parity oracle).
 
+    ``n_new`` (B,) int32 is the speculative verify mode (``docs/DESIGN.md``
+    §8): of the step's S rows, only rows ``r < n_new[b]`` are live — their
+    KV lands at positions ``cache_pos[b] + r`` and their outputs are real;
+    dead rows scatter to the scratch page and read back 0.  Rows whose
+    position would fall past the page table's reach (a near-full
+    reservation verifying more tokens than its budget) also redirect to
+    scratch, so a verify step can never corrupt a live page.
+
     Inside a sharding context with a >1 ``model`` axis the whole step —
     scatter *and* attend — runs under ``shard_map`` instead (the
     partitioned decode path, ``docs/DESIGN.md`` §3): KV heads partition
@@ -214,11 +222,27 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
     ck, cv = cache[0], cache[1]
     page = ck.shape[1]
     tok_pos = cache_pos[:, None] + jnp.arange(s)[None, :]       # (B, S)
-    pidx = jnp.take_along_axis(page_table, tok_pos // page, axis=1)
+    if n_new is None:
+        pidx = jnp.take_along_axis(page_table, tok_pos // page, axis=1)
+        slot = tok_pos % page
+    else:
+        from repro.serving.allocator import SCRATCH_PAGE
+        width = page_table.shape[1]
+        live = ((jnp.arange(s)[None, :] < n_new[:, None])
+                & (tok_pos < width * page))
+        pidx = jnp.take_along_axis(
+            page_table, jnp.clip(tok_pos // page, 0, width - 1), axis=1)
+        pidx = jnp.where(live, pidx, SCRATCH_PAGE)
+        slot = jnp.where(live, tok_pos % page, 0)
 
     mesh = active_mesh()
     msize = model_axis_size() or 1
     if mesh is not None and msize > 1:
+        if n_new is not None:
+            raise NotImplementedError(
+                "speculative verify (n_new) is not supported on the "
+                "sharded paged decode path — the scheduler degrades to "
+                "1-token decode under a >1 model axis")
         by = "heads" if cfg.n_kv_heads % msize == 0 else "pages"
         if by == "pages" and ck.shape[0] % msize:
             raise ValueError(
@@ -233,7 +257,7 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
         else:
             upds = (k, v)
         pools = _paged_scatter_sharded(mesh, by, tuple(cache), upds,
-                                       pidx, tok_pos % page)
+                                       pidx, slot)
         if by == "heads":
             o = _paged_attend_tp(q, tok_pos, page_table, cache_pos + s,
                                  pools, cfg, scale=scale,
@@ -250,15 +274,15 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
         cks, cvs = cache[2], cache[3]
         kq, k_sc = quantize_kv(k)             # (B,S,K,hd) int8, (B,S,K) f32
         vq, v_sc = quantize_kv(v)
-        ck = ck.at[pidx, tok_pos % page].set(kq)
-        cv = cv.at[pidx, tok_pos % page].set(vq)
-        cks = cks.at[pidx, tok_pos % page].set(k_sc)
-        cvs = cvs.at[pidx, tok_pos % page].set(v_sc)
+        ck = ck.at[pidx, slot].set(kq)
+        cv = cv.at[pidx, slot].set(vq)
+        cks = cks.at[pidx, slot].set(k_sc)
+        cvs = cvs.at[pidx, slot].set(v_sc)
     else:
         cks = cvs = None
-        ck = ck.at[pidx, tok_pos % page].set(k.astype(ck.dtype))
-        cv = cv.at[pidx, tok_pos % page].set(v.astype(cv.dtype))
-    lengths = cache_pos + s
+        ck = ck.at[pidx, slot].set(k.astype(ck.dtype))
+        cv = cv.at[pidx, slot].set(v.astype(cv.dtype))
+    lengths = cache_pos + (s if n_new is None else n_new)
 
     if _flash_engine_live(cfg):
         from repro.kernels.flash_attention.ops import paged_decode_attention
@@ -268,7 +292,7 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
             return paged_decode_attention(
                 q, ck, cv, page_table, lengths, scale=scale, window=window,
                 softcap=cfg.attn_logit_softcap, q_chunk=q_chunk,
-                k_scales=cks, v_scales=cvs)
+                k_scales=cks, v_scales=cvs, new_lens=n_new)
 
         o = _run_windowed(_pdec, cfg, is_local)
     else:
@@ -287,6 +311,10 @@ def _attend_paged(params, q, k, v, cfg: ModelConfig, *, cache, cache_pos,
                           tok_pos, jnp.arange(kd.shape[1]), scale=scale,
                           cap=cfg.attn_logit_softcap, causal=True,
                           window=cfg.sliding_window, is_local=is_local)
+        if n_new is not None:
+            # dead verify rows read back 0 (kernel/oracle convention)
+            o = o * (jnp.arange(s)[None, :] < n_new[:, None]
+                     )[..., None, None, None].astype(o.dtype)
 
     o = o.reshape(b, s, cfg.q_dim)
     y = apply_linear(params["wo"], o, mode=cfg.quant_proj)
@@ -480,7 +508,8 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
                     memory: jax.Array | None = None,
                     cache: tuple | None = None,
                     cache_pos: jax.Array | None = None,
-                    page_table: jax.Array | None = None):
+                    page_table: jax.Array | None = None,
+                    n_new: jax.Array | None = None):
     """Self- or cross-attention.
 
     x: (B, S, D).  memory: (B, T, D) for cross-attention (no cache, no rope).
@@ -500,9 +529,14 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
         routes through the paged flash-decode schedule
         (``kernels/flash_attention/decode.py``) when ``cfg.attn_impl``
         selects the flash engine, else through a dense gather fallback.
+        ``n_new`` (B,) int32 selects the paged layout's speculative
+        verify mode (see ``_attend_paged``); dense caches don't support
+        it.
 
     Returns (y, new_cache or None).
     """
+    assert n_new is None or page_table is not None, \
+        "n_new (speculative verify) requires the paged cache layout"
     b, s, _ = x.shape
     kh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
     hd = cfg.head_dim
@@ -532,7 +566,8 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
     if cache is not None and page_table is not None:
         return _attend_paged(params, q, k, v, cfg, cache=cache,
                              cache_pos=cache_pos, page_table=page_table,
-                             is_local=is_local, scale=scale, b=b, s=s)
+                             is_local=is_local, scale=scale, b=b, s=s,
+                             n_new=n_new)
 
     new_cache = None
     if cache is not None:

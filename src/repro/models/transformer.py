@@ -102,12 +102,13 @@ def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
 # Block apply
 # ===========================================================================
 def _decoder_block(p: Params, x, cfg: ModelConfig, *, positions, is_local,
-                   causal, cache_kv, cache_pos, memory, page_table=None):
+                   causal, cache_kv, cache_pos, memory, page_table=None,
+                   n_new=None):
     h = apply_norm(p["norm_attn"], x, cfg)
     a_out, new_kv = apply_attention(p["attn"], h, cfg, positions=positions,
                                     is_local=is_local, causal=causal,
                                     cache=cache_kv, cache_pos=cache_pos,
-                                    page_table=page_table)
+                                    page_table=page_table, n_new=n_new)
     # materialize the TP partial-sum reduction in bf16 BEFORE the (f32
     # internal) norm/residual — otherwise GSPMD hoists the all-reduce past
     # the upcast and moves 2× the bytes
@@ -156,10 +157,14 @@ def _local_flags(cfg: ModelConfig) -> jax.Array:
 # Layer-stack scans (train/prefill vs decode)
 # ===========================================================================
 def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
-                  cache, cache_pos, memory):
+                  cache, cache_pos, memory, n_valid=None):
     flags = _local_flags(cfg)
     decode = cache is not None
     paged = decode and "k_pages" in cache
+    if n_valid is not None and not paged:
+        raise NotImplementedError(
+            "n_valid on the attention stack requires the paged cache "
+            "layout (speculative verify, docs/DESIGN.md §8)")
     quant = paged and "k_scales" in cache
     page_table = cache["page_table"] if paged else None
     # per-layer page state threaded through the scan as xs (the quantized
@@ -179,7 +184,7 @@ def _scan_decoder(params, x, cfg: ModelConfig, *, positions, causal,
         x, new_kv, aux = _decoder_block(
             lp, x, cfg, positions=positions, is_local=flag, causal=causal,
             cache_kv=cache_kv, cache_pos=cache_pos, memory=memory,
-            page_table=page_table)
+            page_table=page_table, n_new=n_valid)
         aux_sum = aux_sum + aux.get("load_balance_loss", 0.0)
         # sequence-sharded residual between blocks: the checkpointed carry
         # is 1/|model| sized (no-op when seq doesn't divide, e.g. decode)
@@ -310,10 +315,12 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     cache/cache_pos: decode state (see ``serving/cache.py`` layouts).
     ``cache_pos`` is a scalar (batch-synchronous) or (B,) int32 vector of
     per-sequence write positions; with a paged or SSM cache a scalar is
-    broadcast.  ``n_valid`` (B,) int32 (SSM/hybrid prefill only) marks how
-    many of the S tokens each row actually commits — padded positions
-    beyond it leave the recurrent state untouched.  The paged/SSM
-    new_cache carries ``seq_lens = cache_pos + committed``.
+    broadcast.  ``n_valid`` (B,) int32 marks how many of the S tokens
+    each row actually commits: SSM/hybrid prefill leaves the recurrent
+    state untouched past it, and the paged attention stack runs in
+    speculative verify mode (``docs/DESIGN.md`` §8) — rows past it are
+    masked, their KV scattered to the scratch page, their outputs 0.
+    The paged/SSM new_cache carries ``seq_lens = cache_pos + committed``.
     """
     x = embed_tokens(params["embed"], tokens, cfg)
     if frontend_embeds is not None and cache is None:
@@ -356,10 +363,12 @@ def apply_model(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
     else:
         x, lb, new_cache = _scan_decoder(
             params, x, cfg, positions=positions, causal=True,
-            cache=cache, cache_pos=cache_pos, memory=memory)
+            cache=cache, cache_pos=cache_pos, memory=memory,
+            n_valid=n_valid if paged else None)
         aux["load_balance_loss"] = lb
         if paged:
-            new_cache["seq_lens"] = cache_pos + s
+            new_cache["seq_lens"] = cache_pos + (s if n_valid is None
+                                                 else n_valid)
 
     x = apply_norm(params["final_norm"], x, cfg)
     logits = unembed(params["embed"], x, cfg, params.get("lm_head"))

@@ -79,8 +79,8 @@ from repro.core.tiling import ceil_div
 __all__ = ["ALLOC_KEYS", "init_allocator", "can_admit", "alloc_pages",
            "free_pages", "share_pages", "attach_allocator",
            "allocator_state", "store_allocator", "admit_sequence",
-           "free_sequence", "fork_sequence", "pool_occupancy",
-           "shard_occupancy", "SCRATCH_PAGE"]
+           "free_sequence", "fork_sequence", "rewind_sequence",
+           "pool_occupancy", "shard_occupancy", "SCRATCH_PAGE"]
 
 SCRATCH_PAGE = 0          # reserved sink page, never allocated
 _RESERVED = 1             # global pages [0, _RESERVED) are pinned at init
@@ -282,6 +282,37 @@ def free_sequence(cache: dict, slot: int) -> dict:
         jnp.full((width,), SCRATCH_PAGE, jnp.int32))
     cache["seq_lens"] = cache["seq_lens"].at[slot].set(0)
     cache["alloc_held"] = cache["alloc_held"].at[slot].set(0)
+    return cache
+
+
+def rewind_sequence(cache: dict, slot: int, new_len: int) -> dict:
+    """Rewind row ``slot``'s committed length to ``new_len`` tokens
+    (speculative rollback, ``docs/DESIGN.md`` §8).
+
+    The page reservation is untouched — pages are held for the sequence's
+    lifetime, so rolling back never moves or frees a page; ``seq_lens``
+    drops and every rewound token's row in *every* per-page array
+    (``PAGE_STATE_KEYS`` — §2 invariant 5: a quantized pool's scale rows
+    rewind with their int8 pages) is zeroed, so a later fork or prefix
+    share of the boundary page can never observe rejected-draft state.
+    Host-side eager spelling; the in-engine traced form is
+    ``cache.invalidate_token_rows``.
+    """
+    from repro.serving.cache import invalidate_token_rows
+    lens = cache["seq_lens"]
+    old = int(lens[slot])
+    new_len = int(new_len)
+    assert 0 <= new_len <= old, (slot, new_len, old)
+    cache = dict(cache)
+    if old > new_len:
+        span = old - new_len
+        b = lens.shape[0]
+        tok = jnp.broadcast_to(
+            new_len + jnp.arange(span, dtype=jnp.int32)[None, :], (b, span))
+        inv = jnp.broadcast_to(
+            (jnp.arange(b) == slot)[:, None], (b, span))
+        cache = invalidate_token_rows(cache, tok, inv)
+    cache["seq_lens"] = lens.at[slot].set(new_len)
     return cache
 
 

@@ -323,6 +323,36 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def invalidate_token_rows(cache: dict, tok_pos: jnp.ndarray,
+                          inv: jnp.ndarray) -> dict:
+    """Zero the page-state rows holding the given token positions.
+
+    ``tok_pos`` (B, S) int32 logical token positions per sequence;
+    ``inv`` (B, S) bool selects which of them to invalidate.  This is
+    speculative rollback's page-state half (``docs/DESIGN.md`` §8):
+    rejected draft tokens' K/V rows — and, per §2 invariant 5, their
+    ``k_scales``/``v_scales`` rows, via ``PAGE_STATE_KEYS`` — are zeroed
+    so nothing that later aliases the page (fork, prefix share) can
+    observe stale speculative state.  Deselected entries and positions
+    past the page table's reach redirect to the scratch page (harmless
+    writes).  Pure jnp — safe inside jit; returns a new cache dict.
+    """
+    from repro.serving.allocator import SCRATCH_PAGE
+    pt = cache["page_table"]
+    page = cache["k_pages"].shape[2]
+    width = pt.shape[1]
+    inv = inv & (tok_pos < width * page)
+    pidx = jnp.take_along_axis(
+        pt, jnp.clip(tok_pos // page, 0, width - 1), axis=1)
+    pidx = jnp.where(inv, pidx, SCRATCH_PAGE)
+    slot = jnp.where(inv, tok_pos % page, 0)
+    out = dict(cache)
+    for key in PAGE_STATE_KEYS:
+        if key in out:
+            out[key] = out[key].at[:, pidx, slot].set(0)
+    return out
+
+
 def cache_shardings(cfg: ModelConfig, cache: dict,
                     config: CacheConfig) -> dict:
     """Per-leaf ``NamedSharding``s for a cache built with ``config``

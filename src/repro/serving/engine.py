@@ -147,6 +147,28 @@ def cache_capacity(cache: dict) -> int | None:
     return None
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
+def _prefill_run(params, cache, prompts, prompt_lens, start_pos,
+                 cfg: ModelConfig, mesh=None):
+    """Jitted single-pass prefill body: one compile per (batch,
+    padded-width) shape.  ``start_pos`` rides in as a traced scalar so
+    prefix-shared admissions forking at *any* prefix length share the
+    same executable — the scheduler's bucketed padding bounds the shape
+    count, and admission ticks stop paying per-op eager dispatch for
+    the whole model.  The cache is not donated: scheduler admissions
+    prefill a slot *view* whose leaves the caller merges back."""
+    b, s_pad = prompts.shape
+    pos0 = jnp.broadcast_to(start_pos, (b,)).astype(jnp.int32)
+    nv = (jnp.clip(prompt_lens - start_pos, 0, s_pad)
+          if "ssm_h" in cache else None)
+    with _mesh_context(mesh):
+        logits, cache, _ = apply_model(params, prompts, cfg, cache=cache,
+                                       cache_pos=pos0, n_valid=nv)
+    next_logits = jnp.take_along_axis(
+        logits, (prompt_lens - 1 - start_pos)[:, None, None], axis=1)[:, 0]
+    return next_logits, cache
+
+
 def prefill(params: Params, cache: dict, prompts: jax.Array,
             prompt_lens: jax.Array, cfg: ModelConfig, *,
             memory: jax.Array | None = None,
@@ -201,16 +223,21 @@ def prefill(params: Params, cache: dict, prompts: jax.Array,
     # contribution 0 — right-padding invisible to the state)
     is_ssm = "ssm_h" in cache
     if chunk is None or s_pad <= chunk:
-        pos0 = jnp.full((b,), start_pos, jnp.int32)
-        nv = (jnp.clip(prompt_lens - start_pos, 0, s_pad)
-              if is_ssm else None)
-        with _mesh_context(mesh):
-            logits, cache, _ = apply_model(params, prompts, cfg,
-                                           cache=cache, cache_pos=pos0,
-                                           memory=memory, n_valid=nv)
-        next_logits = jnp.take_along_axis(
-            logits, (prompt_lens - 1 - start_pos)[:, None, None],
-            axis=1)[:, 0]
+        if memory is None:
+            next_logits, cache = _prefill_run(
+                params, cache, prompts, prompt_lens,
+                jnp.asarray(start_pos, jnp.int32), cfg, mesh)
+        else:
+            pos0 = jnp.full((b,), start_pos, jnp.int32)
+            nv = (jnp.clip(prompt_lens - start_pos, 0, s_pad)
+                  if is_ssm else None)
+            with _mesh_context(mesh):
+                logits, cache, _ = apply_model(params, prompts, cfg,
+                                               cache=cache, cache_pos=pos0,
+                                               memory=memory, n_valid=nv)
+            next_logits = jnp.take_along_axis(
+                logits, (prompt_lens - 1 - start_pos)[:, None, None],
+                axis=1)[:, 0]
     else:
         next_logits = None
         for c0 in range(0, s_pad, chunk):
@@ -301,6 +328,123 @@ def greedy_decode(params: Params, cache: dict, first_token: jax.Array,
     seq = jnp.concatenate([first_token, jnp.swapaxes(toks[..., 0], 0, 1)],
                           axis=1)
     return seq, cache
+
+
+def spec_step(params: Params, draft_params: Params, cache: dict,
+              draft_cache: dict, tokens: jax.Array, budget_left: jax.Array,
+              active: jax.Array, cfg: ModelConfig, draft_cfg: ModelConfig,
+              *, n_draft: int, eos_id: int | None = None,
+              config: CacheConfig | None = None):
+    """One speculative draft-and-verify tick (``docs/DESIGN.md`` §8).
+
+    ``tokens`` (B, 1) int32 — each live row's last emitted token;
+    ``budget_left`` (B,) int32 — tokens each row may still emit;
+    ``active`` (B,) bool.  The draft model proposes ``n_draft`` greedy
+    tokens per row from its own dense cache, the target verifies all of
+    them (plus the input token) in ONE forward pass through the paged
+    flash schedule's n-token verify mode, and acceptance / rollback run
+    in-engine: committed length advances by exactly the emitted count and
+    every rejected row's page state is invalidated.
+
+    Returns ``(pred (B, n_draft+1) int32 — the target's greedy token at
+    every verify position, emitted = pred[b, :m[b]]; m (B,) int32 —
+    emitted token counts; acc (B,) int32 — how many of the emitted
+    tokens were draft proposals (``min(k, m)`` — when every draft
+    matches, all ``m`` emitted tokens are accepted drafts); cache;
+    draft_cache)``.  Both caches are donated.  Greedy outputs are
+    bitwise equal to 1-token decode under the ``ref`` kernel mode (the
+    kernel modes are argmax-stable in practice but carry no bitwise
+    contract across q-block shapes).
+    """
+    validate_decode_cache(cache, cfg, config=config)
+    from repro.kernels.tiled_matmul.ops import kernel_mode
+    mesh = config.mesh if config is not None else None
+    return _spec_run(params, draft_params, cache, draft_cache, tokens,
+                     budget_left, jnp.asarray(active), cfg, draft_cfg,
+                     n_draft, -1 if eos_id is None else int(eos_id),
+                     kernel_mode(), mesh)
+
+
+@functools.partial(jax.jit, donate_argnums=(1,),
+                   static_argnames=("draft_cfg",))
+def draft_prefill_row(draft_params, draft_cache, prompts, prompt_lens,
+                      start_pos, slot, draft_cfg: ModelConfig):
+    """Commit a prompt into row ``slot`` of the dense draft cache as one
+    jitted call (slice → prefill → merge fused; the slot index rides in
+    as a traced scalar so every admission shares one executable per
+    padded width).  ``prompts`` is (1, S_pad); the draft's logits are
+    discarded — the first spec tick re-drafts from the target's first
+    token.  The draft cache is donated: the scheduler owns it."""
+    view = {key: jax.lax.dynamic_slice_in_dim(draft_cache[key], slot, 1,
+                                              axis=1)
+            for key in ("k", "v")}
+    _, view = _prefill_run(draft_params, view, prompts, prompt_lens,
+                           start_pos, draft_cfg)
+    return {key: jax.lax.dynamic_update_slice_in_dim(
+                draft_cache[key], view[key], slot, axis=1)
+            for key in ("k", "v")}
+
+
+@functools.partial(jax.jit, donate_argnums=(2, 3),
+                   static_argnames=("cfg", "draft_cfg", "n_draft", "eos_id",
+                                    "mode", "mesh"))
+def _spec_run(params, draft_params, cache, draft_cache, tok, budget_left,
+              active, cfg: ModelConfig, draft_cfg: ModelConfig,
+              n_draft: int, eos_id: int, mode: str, mesh=None):
+    """Jitted body of ``spec_step`` — draft scan, one verify pass,
+    in-engine acceptance with rollback.  Module-level jit for the same
+    reasons as ``_greedy_run`` (its docstring); ``eos_id=-1`` means no
+    EOS (token ids are non-negative).
+
+    Acceptance math (greedy): with committed length ``c`` the verify
+    input is ``[x0, d_1..d_n]`` at positions ``c..c+n``; ``pred[r]`` is
+    the target's greedy token after position ``c+r``, so the drafts'
+    leading agreement ``k = |{i: d_{i+1} == pred[i] for all j<=i}|``
+    yields ``m = min(k+1, n)`` emitted tokens — capped at ``n`` (the
+    full-accept bonus token is dropped: the draft cache only holds KV
+    through position ``c+n-1``, so emitting ``n+1`` would desync it) —
+    then capped by the first emitted EOS and by ``budget_left``.
+    Rollback is ``seq_lens = c + m`` plus page-state invalidation of the
+    rejected rows; pages never move.
+    """
+    from repro.serving.cache import invalidate_token_rows
+    c = cache["seq_lens"]
+    s = n_draft + 1
+
+    with _mesh_context(mesh):
+        def dstep(carry, t):
+            dcache, dtok = carry
+            lg, dcache = serve_step(draft_params, dcache, dtok, c + t,
+                                    draft_cfg)
+            nxt = jnp.argmax(lg[:, -1, :], axis=-1)[:, None].astype(
+                jnp.int32)
+            return (dcache, nxt), nxt
+
+        (draft_cache, _), drafts = jax.lax.scan(
+            dstep, (draft_cache, tok), jnp.arange(n_draft))
+        drafts = jnp.swapaxes(drafts[..., 0], 0, 1)        # (B, n_draft)
+        verify = jnp.concatenate([tok, drafts], axis=1)    # (B, S)
+        n_valid = jnp.where(active, s, 0).astype(jnp.int32)
+        logits, cache, _ = apply_model(params, verify, cfg, cache=cache,
+                                       cache_pos=c, n_valid=n_valid)
+
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, S)
+    match = (pred[:, :n_draft] == drafts).astype(jnp.int32)
+    k = jnp.sum(jnp.cumprod(match, axis=1), axis=1)        # leading agrees
+    m = jnp.minimum(k + 1, n_draft) if n_draft else jnp.ones_like(k)
+    eos_hit = pred == eos_id
+    m = jnp.where(jnp.any(eos_hit, axis=1),
+                  jnp.minimum(m, jnp.argmax(eos_hit, axis=1) + 1), m)
+    m = jnp.minimum(m, budget_left)
+    m = jnp.where(active, m, 0).astype(jnp.int32)
+
+    # rollback: rewind seq_lens and invalidate the written-but-rejected
+    # rows (every PAGE_STATE_KEYS array — scales travel with their pages)
+    row = jnp.arange(s)[None, :]
+    rej = (row >= m[:, None]) & (row < n_valid[:, None])
+    cache = invalidate_token_rows(cache, c[:, None] + row, rej)
+    cache["seq_lens"] = jnp.where(active, c + m, 0).astype(jnp.int32)
+    return pred, m, jnp.minimum(k, m).astype(jnp.int32), cache, draft_cache
 
 
 @functools.partial(jax.jit, donate_argnums=(1,),

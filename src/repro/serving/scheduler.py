@@ -53,10 +53,11 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.serving.cache import CacheConfig, cache_shardings, init_cache
-from repro.serving.engine import _greedy_run, prefill
+from repro.serving.engine import (_greedy_run, draft_prefill_row, prefill,
+                                  spec_step)
 from repro.serving.state import default_serving_config, state_handler
 
-__all__ = ["Request", "Scheduler", "PoolOccupancy"]
+__all__ = ["Request", "Scheduler", "PoolOccupancy", "SpecConfig"]
 
 
 class PoolOccupancy(NamedTuple):
@@ -70,6 +71,30 @@ class PoolOccupancy(NamedTuple):
     used: int
     total: int
     per_shard: tuple[tuple[int, int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Draft-and-verify speculative decode (``docs/DESIGN.md`` §8).
+
+    ``draft_params``/``draft_cfg``: the proposal model — a smaller config
+    from ``configs/`` or a truncated self-speculation stack; it must share
+    the target's tokenizer (same vocab ids).  ``n_draft``: tokens proposed
+    per scheduler tick; the target verifies all of them (plus the input
+    token) in one ``n_draft+1``-row pass through the paged flash
+    schedule's verify mode, so each tick emits 1..n_draft tokens.
+
+    The scheduler honors this only when the family's state handler sets
+    ``supports_speculative`` (attention families over paged KV) and no
+    multi-device model axis is active; otherwise it degrades to plain
+    1-token decode with a warning — SSM/hybrid recurrent state folds
+    every token into one fixed-size state and cannot rewind a rejected
+    tail.
+    """
+
+    draft_params: dict
+    draft_cfg: ModelConfig
+    n_draft: int = 4
 
 
 @dataclasses.dataclass
@@ -130,6 +155,13 @@ class Scheduler:
       bucket: prompts are right-padded to a multiple of this before
         prefill (bounds the number of traced prefill shapes).
       eos_id: optional early-stop token id.
+      spec: a ``SpecConfig`` enabling draft-and-verify speculative
+        decode — each tick proposes ``n_draft`` tokens with the draft
+        model and verifies them in one target pass, emitting 1..n_draft
+        tokens per tick with greedy output identical to 1-token decode
+        (bitwise under the ref kernel mode).  Families whose handler
+        lacks ``supports_speculative`` (SSM/hybrid) and mesh-sharded
+        pools degrade to plain decode with a warning.
       page_size / pool_pages / kv_quant: **deprecated** keyword spelling
         of the ``config`` fields (pre-PR-7); still honored with a
         ``DeprecationWarning``, mutually exclusive with ``config``.
@@ -143,7 +175,8 @@ class Scheduler:
                  kv_quant: str | None = None,
                  prefill_chunk: int | None = None,
                  share_prefix: bool = True, bucket: int = 16,
-                 eos_id: int | None = None, dtype=jnp.float32):
+                 eos_id: int | None = None, dtype=jnp.float32,
+                 spec: SpecConfig | None = None):
         legacy = {k: v for k, v in (("page_size", page_size),
                                     ("pool_pages", pool_pages),
                                     ("kv_quant", kv_quant)) if v is not None}
@@ -176,6 +209,31 @@ class Scheduler:
         # between jitted ticks
         self._shardings = (cache_shardings(cfg, self.cache, config)
                            if config.mesh is not None else None)
+        self.spec: SpecConfig | None = None
+        self.draft_cache: dict | None = None
+        # speculative accounting: proposed/accepted draft tokens and
+        # emitted totals per decode tick (benchmarks report acceptance
+        # rate and tokens/step from these)
+        self.spec_stats = {"ticks": 0, "proposed": 0, "accepted": 0,
+                           "emitted": 0}
+        if spec is not None:
+            if not self.handler.supports_speculative:
+                warnings.warn(
+                    f"state handler {self.handler.name!r} does not support "
+                    "speculative rollback; degrading to 1-token decode",
+                    stacklevel=2)
+            elif config.model_size() > 1:
+                warnings.warn(
+                    "speculative decode is not supported over a sharded "
+                    "page pool; degrading to 1-token decode", stacklevel=2)
+            else:
+                assert spec.n_draft >= 1, spec.n_draft
+                self.spec = spec
+                # the draft's dense cache must hold KV through position
+                # c + n_draft - 1 where c can reach capacity - 1
+                cap = self.handler.capacity(self.cache) or max_len
+                self.draft_cache = init_cache(
+                    spec.draft_cfg, slots, cap + spec.n_draft, dtype=dtype)
         self.slots: list[_Slot | None] = [None] * slots
         self.queue: deque[Request] = deque()
         self.finished: dict[int, np.ndarray] = {}
@@ -272,6 +330,9 @@ class Scheduler:
         for b, slot in enumerate(self.slots):
             if slot is not None and self._finished(slot):
                 self.cache = self.handler.free(self.cache, b)
+                if self.spec is not None:
+                    self.draft_cache = self.handler.draft_free(
+                        self.draft_cache, b)
                 self.finished[slot.req.rid] = np.asarray(slot.generated,
                                                          np.int32)
                 self.request_log[slot.req.rid].update(
@@ -315,6 +376,11 @@ class Scheduler:
             if shared > 0:
                 self.cache, ok = self.handler.fork(
                     self.cache, parent, b, shared, budget)
+                if bool(ok) and self.spec is not None:
+                    # the child wakes with the parent's committed prefix:
+                    # the draft model must see the same context
+                    self.draft_cache = self.handler.draft_fork(
+                        self.draft_cache, parent, b)
             else:
                 self.cache, ok = self.handler.admit(self.cache, b, budget)
             if not bool(ok):
@@ -342,6 +408,16 @@ class Scheduler:
             chunk=self.prefill_chunk, start_pos=start,
             config=self.config)
         self.cache = self.handler.merge_slot(self.cache, view, b)
+        if self.spec is not None:
+            # commit the prompt into the draft model's dense row too (the
+            # prefix-shared part was copied by draft_fork; only the
+            # suffix runs), one fused jitted call per admission
+            self.draft_cache = draft_prefill_row(
+                self.spec.draft_params, self.draft_cache,
+                jnp.asarray(padded[None]),
+                jnp.asarray([prompt.size], jnp.int32),
+                jnp.asarray(start, jnp.int32), jnp.asarray(b, jnp.int32),
+                self.spec.draft_cfg)
         self._pin_shardings()
         return int(jnp.argmax(nl[0]))
 
@@ -360,6 +436,9 @@ class Scheduler:
 
     def _decode(self):
         if not self.n_active:
+            return
+        if self.spec is not None:
+            self._spec_decode()
             return
         from repro.kernels.tiled_matmul.ops import kernel_mode
         active = np.asarray([s is not None for s in self.slots])
@@ -384,3 +463,42 @@ class Scheduler:
                 slot.last_token = int(nxt[b])
                 slot.generated.append(slot.last_token)
                 slot.token_ticks.append(self._ticks)
+
+    def _spec_decode(self):
+        """One draft-and-verify tick (``engine.spec_step``): each live
+        row emits 1..n_draft tokens; rejected drafts roll back in-engine
+        (``seq_lens`` rewind + page-state invalidation — pages never
+        move).  The event log records one ``token_tick`` per *emitted*
+        token, so a multi-accept step contributes that many entries at
+        the same tick and the latency percentiles stay per-token."""
+        spec = self.spec
+        active = np.asarray([s is not None for s in self.slots])
+        tok = jnp.asarray([[s.last_token if s else 0] for s in self.slots],
+                          jnp.int32)
+        # rows at budget already (e.g. admitted this tick with an
+        # exhausted budget) emit 0 and roll their whole verify back
+        budget_left = jnp.asarray(
+            [s.req.max_new_tokens - len(s.generated) if s else 0
+             for s in self.slots], jnp.int32)
+        self._pin_shardings()
+        pred, m, acc, self.cache, self.draft_cache = spec_step(
+            self.params, spec.draft_params, self.cache, self.draft_cache,
+            tok, budget_left, jnp.asarray(active), self.cfg,
+            spec.draft_cfg, n_draft=spec.n_draft, eos_id=self.eos_id,
+            config=self.config)
+        pred, m, acc = np.asarray(pred), np.asarray(m), np.asarray(acc)
+        self.cache = self.handler.advance(self.cache, active)
+        st = self.spec_stats
+        st["ticks"] += 1
+        st["proposed"] += int(active.sum()) * spec.n_draft
+        st["emitted"] += int(m.sum())
+        # accepted = emitted tokens that were draft proposals (min(k, m)
+        # in-engine: on a full match every emitted token is a draft)
+        st["accepted"] += int(acc.sum())
+        for b, slot in enumerate(self.slots):
+            if slot is None or not m[b]:
+                continue
+            emitted = [int(t) for t in pred[b, :m[b]]]
+            slot.generated.extend(emitted)
+            slot.token_ticks.extend([self._ticks] * len(emitted))
+            slot.last_token = emitted[-1]

@@ -70,6 +70,13 @@ class StateHandler:
 
     name = "base"
     supports_prefix_sharing = False
+    # can this family's state roll back a rejected speculative tail?
+    # (requires the overwrite-before-visible invariant: rewinding
+    # seq_lens must be a complete rollback.  Recurrent SSM state folds
+    # every token into one fixed-size state — there is nothing to
+    # rewind — so SSM/hybrid keep False and the scheduler degrades those
+    # families to plain 1-token decode under spec=...)
+    supports_speculative = False
 
     def __init__(self, cfg: ModelConfig, config: CacheConfig | None = None):
         self.cfg = cfg
@@ -129,6 +136,21 @@ class StateHandler:
         """Fold a prefilled ``slot_view`` back into row ``b``."""
         raise NotImplementedError
 
+    # -- draft-model state (speculative decode, docs/DESIGN.md §8) ---------
+    def draft_free(self, draft_cache: dict, slot: int) -> dict:
+        """Retire row ``slot`` of the dense draft cache.  Deliberately a
+        no-op by default: draft visibility is governed by the target's
+        ``seq_lens`` (overwrite-before-visible — a new occupant's prefill
+        overwrites its rows before any draft step attends them)."""
+        return draft_cache
+
+    def draft_fork(self, draft_cache: dict, parent: int, child: int) -> dict:
+        """Copy ``parent``'s draft-cache row into ``child`` (prefix
+        sharing admits the child with the parent's committed prefix, so
+        the draft model must see the same context).  Only meaningful for
+        handlers with ``supports_speculative``."""
+        raise NotImplementedError
+
     # -- scheduler contract ------------------------------------------------
     def require_scheduler_config(self) -> None:
         """Raise if ``self.config`` cannot back a continuous-batching
@@ -140,6 +162,7 @@ class PagedKVHandler(StateHandler):
 
     name = "paged_kv"
     supports_prefix_sharing = True
+    supports_speculative = True
 
     def require_scheduler_config(self) -> None:
         c = self.config
@@ -188,6 +211,13 @@ class PagedKVHandler(StateHandler):
         cache["seq_lens"] = cache["seq_lens"].at[b].set(
             view["seq_lens"][0])
         return cache
+
+    def draft_fork(self, draft_cache, parent, child):
+        draft_cache = dict(draft_cache)
+        for key in ("k", "v"):
+            draft_cache[key] = draft_cache[key].at[:, child].set(
+                draft_cache[key][:, parent])
+        return draft_cache
 
 
 class SlotStateHandler(StateHandler):
